@@ -1,0 +1,87 @@
+"""Shared benchmark scaffolding: the scaled-down SLM/LLM pair (the paper's
+MiniLLM-gpt2-720M / GPT-J-6B roles at laptop scale) and the synthetic VAST /
+UR-FALL analogues."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs.base import ModelConfig
+from repro.core.federated import FederatedConfig, FederatedRunner
+from repro.data.synthetic import synthetic_multimodal_corpus
+from repro.models.model import build_model
+
+RESULTS_DIR = os.path.join("experiments", "results")
+
+_COMMON = dict(n_modalities=3, modality_dim=32, n_soft_tokens=4,
+               connector_dim=48, remat=False, activation="gelu",
+               vocab_size=128)
+
+
+def slm_cfg(lora_rank: int = 4) -> ModelConfig:
+    return ModelConfig(name="bench-slm", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                       d_ff=128, lora_rank=lora_rank, **_COMMON)
+
+
+def llm_cfg() -> ModelConfig:
+    return ModelConfig(name="bench-llm", family="dense", n_layers=3,
+                       d_model=96, n_heads=4, n_kv_heads=2, head_dim=24,
+                       d_ff=192, lora_rank=4, **_COMMON)
+
+
+def vast_corpus(seed: int = 0, n: int = 512):
+    """Summary-generation analogue (VAST): 8-token class templates."""
+    return synthetic_multimodal_corpus(seed, n, 32, 128, n_classes=6,
+                                       n_modalities=3, modality_dim=32,
+                                       template_len=8)
+
+
+def urfall_corpus(seed: int = 0, n: int = 512):
+    """3-class classification analogue (UR-FALL): 1-token label."""
+    return synthetic_multimodal_corpus(seed, n, 24, 128, n_classes=3,
+                                       n_modalities=3, modality_dim=32,
+                                       template_len=1)
+
+
+METHOD_CONFIGS = {
+    # method -> (FederatedConfig overrides, slm lora_rank)
+    "standalone": (dict(mode="standalone"), 4),
+    "multi-fedavg": (dict(mode="fedavg", use_ccl=False), 4),
+    "fedmllm": (dict(mode="fedavg", use_ccl=False, prox_weight=0.01), 4),
+    "fedilora": (dict(mode="fedavg", use_ccl=False), 12),   # r=24 vs r=8 paper-scaled
+    "co-plms": (dict(mode="mlecs", use_ccl=False, use_mma=False,
+                     use_seccl=True), 4),
+    "ml-ecs": (dict(mode="mlecs"), 4),
+}
+
+
+def run_method(method: str, corpus, rho: float, rounds: int = 3,
+               n_devices: int = 3, seed: int = 0, **extra):
+    overrides, rank = METHOD_CONFIGS[method]
+    fc = FederatedConfig(n_devices=n_devices, rounds=rounds,
+                         local_steps_ccl=2, local_steps_amt=2,
+                         server_steps=2, batch_size=8, lr=1e-2, rho=rho,
+                         seed=seed, **{**overrides, **extra})
+    runner = FederatedRunner(fc, build_model(slm_cfg(rank)),
+                             build_model(llm_cfg()), corpus)
+    hist = runner.run()
+    return hist[-1]["summary"], hist
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

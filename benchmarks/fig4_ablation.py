@@ -1,0 +1,41 @@
+"""Paper Fig. 4: ablations — ML-ECS w/o MMA and w/o SE-CCL vs full.
+Validation target: both ablations degrade client and server metrics.
+
+MMA only differs from uniform averaging when device modality COUNTS differ
+(Eq. 13); seed=2 gives |M_j| = [2, 1, 3] at rho=0.5.  Accuracy on the small
+fast-mode test split is coarse, so client CE (continuous) is the primary
+ablation metric, matching the paper's relative-drop reporting.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_method, save_result, urfall_corpus
+
+
+def run(fast: bool = True):
+    corpus = urfall_corpus()
+    rounds = 3 if fast else 5
+    table = {}
+    for name, extra in (
+            ("full", {}),
+            ("wo_mma", {"use_mma": False}),
+            ("wo_seccl", {"use_seccl": False})):
+        summ, _ = run_method("ml-ecs", corpus, rho=0.5, rounds=rounds,
+                             seed=2, **extra)
+        table[name] = summ
+        print(f"fig4 {name:9s} avg_acc={summ['avg_acc']:.3f} "
+              f"avg_ce={summ['avg_ce']:.3f} server_acc={summ['server_acc']:.3f} "
+              f"server_ce={summ['server_ce']:.3f}")
+    for v in ("wo_mma", "wo_seccl"):
+        d = table[v]["avg_ce"] - table["full"]["avg_ce"]
+        print(f"fig4 {v} client CE degradation: {d:+.4f}")
+    save_result("fig4_ablation", table)
+    return table
+
+
+def rows_csv(table):
+    return [f"fig4/{k},{v['avg_acc']:.4f},ce={v['avg_ce']:.4f}"
+            for k, v in table.items()]
+
+
+if __name__ == "__main__":
+    run(fast=False)

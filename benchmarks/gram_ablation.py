@@ -1,0 +1,36 @@
+"""Beyond-paper ablation: the gram-VOLUME contrastive score (Eq. 5-8)
+vs the pairwise-COSINE alignment the paper argues against (§3.1, refs
+[45],[8],[9]) — the paper motivates the volume but never ablates it.
+
+Setting: UR-FALL analogue at rho=0.5 (missing modalities), where joint
+>2-modality consistency should matter most."""
+from __future__ import annotations
+
+from benchmarks.common import run_method, save_result, urfall_corpus
+
+
+def run(fast: bool = True):
+    corpus = urfall_corpus()
+    rounds = 3 if fast else 5
+    table = {}
+    for name, extra in (("volume", {}), ("cosine", {"ccl_score": "cosine"})):
+        summ, _ = run_method("ml-ecs", corpus, rho=0.5, rounds=rounds,
+                             seed=2, **extra)
+        table[name] = summ
+        print(f"gram_ablation {name:7s} avg_acc={summ['avg_acc']:.3f} "
+              f"avg_ce={summ['avg_ce']:.3f} worst={summ['worst_acc']:.3f} "
+              f"server_acc={summ['server_acc']:.3f}")
+    d = table["cosine"]["avg_ce"] - table["volume"]["avg_ce"]
+    print(f"gram_ablation cosine-vs-volume client CE delta: {d:+.4f} "
+          "(positive = volume better)")
+    save_result("gram_ablation", table)
+    return table
+
+
+def rows_csv(table):
+    return [f"gram_ablation/{k},{v['avg_acc']:.4f},ce={v['avg_ce']:.4f}"
+            for k, v in table.items()]
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: us_per_call of each Pallas kernel (interpret
+mode on CPU — correctness-path timing, NOT TPU performance; the TPU story
+is the roofline) vs the pure-jnp oracle."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_result
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n: int = 5):
+    fn(*args)                      # compile
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def run(fast: bool = True):
+    ks = jax.random.split(jax.random.key(0), 8)
+    out = {}
+
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out["flash_attention_pallas"] = _time(
+        lambda *a: ops.attention(*a, bq=128, bk=128), q, k, v)
+
+    vs = jax.random.normal(ks[3], (256, 4, 64))
+    out["gram_volume_pallas"] = _time(ops.gram_log_volume, vs)
+    out["gram_volume_jnp"] = _time(ref.gram_log_volume_ref, vs)
+
+    x = jax.random.normal(ks[4], (256, 256))
+    w = jax.random.normal(ks[5], (256, 256))
+    a = jax.random.normal(ks[6], (256, 8))
+    b = jax.random.normal(ks[7], (8, 256))
+    out["lora_matmul_pallas"] = _time(
+        lambda *t: ops.lora_matmul(*t, scale=2.0), x, w, a, b)
+    out["lora_matmul_jnp"] = _time(
+        lambda *t: ref.lora_matmul_ref(*t, 2.0), x, w, a, b)
+
+    for name, us in out.items():
+        print(f"microbench {name:24s} {us:10.1f} us/call")
+    save_result("microbench", out)
+    return out
+
+
+def rows_csv(table):
+    return [f"microbench/{k},{v:.1f}," for k, v in table.items()]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md table — three terms per (arch x shape x mesh), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def dominant_term(t) -> str:
+    cands = {
+        "compute": t.get("compute_s_analytic", t["compute_s"]),
+        "memory": max(t["memory_s"], t.get("memory_s_analytic", 0.0)),
+        "collective": t["collective_s"],
+    }
+    return max(cands, key=cands.get)
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def markdown_table(rows, mesh: str = "16x16", mode_prefix: str = "mlecs"):
+    out = ["| arch | shape | compute s (hlo/analytic) | memory s (hlo/analytic) "
+           "| collective s | dominant | MF/HLO | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or not r["mode"].startswith(mode_prefix):
+            continue
+        t = dict(r["roofline"])
+        t["dominant"] = dominant_term(t)
+        uf = r.get("useful_flops_frac")
+        mem = r.get("memory_analysis", {})
+        hbm = mem.get("temp_size_in_bytes", 0) / 1e9
+        ca = t.get("compute_s_analytic", 0.0)
+        ma = t.get("memory_s_analytic", 0.0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f}/{ca:.3f} "
+            f"| {t['memory_s']:.3f}/{ma:.3f} | {t['collective_s']:.4f} "
+            f"| {t['dominant']} "
+            f"| {uf if uf is None else round(uf, 2)} | {hbm:.1f} |")
+    return "\n".join(out)
+
+
+def run(fast: bool = True):
+    rows = load_all()
+    if not rows:
+        print("roofline: no dry-run artifacts found "
+              "(run python -m repro.launch.dryrun --all first)")
+        return {}
+    print(markdown_table(rows))
+    # worst (most saturated) combos = hillclimb candidates
+    def peak(r):
+        t = r["roofline"]
+        return max(t.get("compute_s_analytic", t["compute_s"]),
+                   t.get("memory_s_analytic", t["memory_s"]),
+                   t["collective_s"])
+    scored = [r for r in rows if r["mesh"] == "16x16"]
+    scored.sort(key=lambda r: -peak(r))
+    print("\nhillclimb candidates (largest dominant term):")
+    for r in scored[:5]:
+        print(f"  {r['arch']} x {r['shape']} dom={r['roofline']['dominant']}"
+              f" = {peak(r):.3f}s")
+    return {f"{r['arch']}__{r['shape']}__{r['mesh']}__{r['mode']}":
+            r["roofline"] for r in rows}
+
+
+def rows_csv(table):
+    return [f"roofline/{k},{v['collective_s']:.5f},dom={v['dominant']}"
+            for k, v in table.items()]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Table 1: methods x MER (rho in {0.5, 0.7, 0.8}) on the VAST and
+UR-FALL analogues — client Avg/Best/Worst + server performance.
+
+Validation target (paper): ML-ECS > Co-PLMs/FediLoRA/FedMLLM > Multi-FedAvg
+~ Standalone, at every rho; degradation as rho drops."""
+from __future__ import annotations
+
+from benchmarks.common import (run_method, save_result, urfall_corpus,
+                               vast_corpus)
+
+
+def run(fast: bool = True):
+    rhos = [0.5, 0.8] if fast else [0.5, 0.7, 0.8]
+    methods = (["standalone", "multi-fedavg", "ml-ecs"] if fast else
+               ["standalone", "multi-fedavg", "fedmllm", "fedilora",
+                "co-plms", "ml-ecs"])
+    rounds = 2 if fast else 4
+    table = {}
+    for task, corpus_fn in (("vast", vast_corpus), ("urfall", urfall_corpus)):
+        corpus = corpus_fn()
+        for rho in rhos:
+            for m in methods:
+                summ, _ = run_method(m, corpus, rho, rounds=rounds)
+                table[f"{task}/rho{rho}/{m}"] = summ
+                print(f"table1 {task} rho={rho} {m:13s} "
+                      f"avg_acc={summ['avg_acc']:.3f} "
+                      f"worst={summ['worst_acc']:.3f} "
+                      f"server={summ['server_acc']:.3f}")
+    save_result("table1_performance", table)
+    return table
+
+
+def rows_csv(table):
+    out = []
+    for k, v in table.items():
+        out.append(f"table1/{k},{v['avg_acc']:.4f},server={v['server_acc']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(fast=False)

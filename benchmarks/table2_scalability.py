@@ -1,0 +1,29 @@
+"""Paper Table 2: client scaling (3 -> 5 -> 10 -> 20 devices).
+Validation target: only marginal client-side degradation with more devices."""
+from __future__ import annotations
+
+from benchmarks.common import run_method, save_result, vast_corpus
+
+
+def run(fast: bool = True):
+    counts = [3, 5] if fast else [3, 5, 10, 20]
+    corpus = vast_corpus(n=768)
+    table = {}
+    for n in counts:
+        summ, _ = run_method("ml-ecs", corpus, rho=0.8, rounds=2,
+                             n_devices=n)
+        table[f"n{n}"] = summ
+        print(f"table2 devices={n:2d} avg_acc={summ['avg_acc']:.3f} "
+              f"best={summ['best_acc']:.3f} worst={summ['worst_acc']:.3f} "
+              f"server={summ['server_acc']:.3f}")
+    save_result("table2_scalability", table)
+    return table
+
+
+def rows_csv(table):
+    return [f"table2/{k},{v['avg_acc']:.4f},server={v['server_acc']:.4f}"
+            for k, v in table.items()]
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,37 @@
+"""End-to-end ML-ECS federated run (Algorithm 1) on the synthetic VAST
+analogue, comparing against Standalone and Multi-FedAvg at a chosen MER.
+
+  PYTHONPATH=src python examples/federated_multimodal.py --rho 0.5 --rounds 3
+"""
+import argparse
+
+from benchmarks.common import run_method, vast_corpus
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rho", type=float, default=0.5,
+                    help="modality existing rate (paper: 0.5/0.7/0.8)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=3)
+    args = ap.parse_args()
+
+    corpus = vast_corpus()
+    print(f"MER rho={args.rho}, {args.devices} devices, "
+          f"{args.rounds} rounds\n")
+    results = {}
+    for method in ("standalone", "multi-fedavg", "ml-ecs"):
+        summ, hist = run_method(method, corpus, args.rho,
+                                rounds=args.rounds, n_devices=args.devices)
+        results[method] = summ
+        print(f"{method:13s} avg_acc={summ['avg_acc']:.3f} "
+              f"best={summ['best_acc']:.3f} worst={summ['worst_acc']:.3f} "
+              f"server_acc={summ['server_acc']:.3f}")
+
+    gain = results["ml-ecs"]["avg_acc"] - results["standalone"]["avg_acc"]
+    print(f"\nML-ECS vs Standalone client gain: {gain:+.3f} "
+          "(paper reports +5.4..+12.1% RLS on VAST)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — ML-ECS: collaborative multimodal edge-cloud learning in JAX.
+
+Layers: configs (arch registry) -> models (six families) -> core (the
+paper's CCL/AMT/MMA/SE-CCL + Algorithm 1) -> sharding/launch (512-chip
+SPMD) -> kernels (Pallas TPU hot spots).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.checkpointing.checkpoint import (load_pytree, save_pytree,
+                                            latest_step, CheckpointManager)

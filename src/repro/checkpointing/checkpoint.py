@@ -1,0 +1,103 @@
+"""Pytree checkpointing without external deps: one .npz per step plus a JSON
+treedef manifest.  Handles bf16 (stored as uint16 view), nested dicts/tuples,
+and federated round state (per-device params + optimizer moments).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays, meta = {}, {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[f"a{i}"] = arr
+        meta[key] = {"idx": i, "dtype": dtype}
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like = _flatten(like)
+
+    def restore(key):
+        m = meta[key]
+        arr = data[f"a{m['idx']}"]
+        if m["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        return jnp.asarray(arr)
+
+    restored = {k: restore(k) for k in flat_like}
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = sorted(_flatten(like).keys())
+    # rebuild in the flatten order of `like`
+    flat_paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    new_leaves = [restored[p] for p in flat_paths]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step}")
+
+    def save(self, step: int, tree: Any) -> None:
+        save_pytree(self.path(step), tree)
+        self._gc()
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        step = latest_step(self.dir) if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(self.path(step), like)
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for f in os.listdir(self.dir)
+                       if (m := re.match(r"step_(\d+)\.npz$", f)))
+        for s in steps[:-self.keep]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(self.path(s) + ext)
+                except OSError:
+                    pass

@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, InputShape,
+                                ModelConfig, get_config)

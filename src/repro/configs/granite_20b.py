@@ -1,0 +1,17 @@
+"""granite-20b — dense llama-arch code model, MQA [arXiv:2405.04324]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    source="arXiv:2405.04324 (Granite Code Models)",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48, n_kv_heads=1, head_dim=128,   # MQA
+    d_ff=24576,
+    vocab_size=49152,
+    activation="gelu",     # gpt-bigcode-style 2-matrix MLP (20.1B total;
+                           # a 3-matrix silu MLP would overshoot to 28B)
+    tie_embeddings=False,
+    n_modalities=3,
+)

@@ -1,0 +1,22 @@
+"""internvl2-1b — VLM: InternViT vision encoder STUBBED, the
+Qwen2-0.5B-class language decoder implemented [arXiv:2404.16821].
+input_specs provides precomputed patch embeddings (B, 256, 1024)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    source="arXiv:2404.16821 (InternVL2)",
+    n_layers=24,
+    d_model=896,
+    n_heads=14, n_kv_heads=2, head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    activation="silu",
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    frontend_tokens=256,
+    frontend_dim=1024,
+    n_modalities=3,
+)

@@ -1,0 +1,117 @@
+"""CCL (cross-modal contrastive learning, §3.1) and AMT (adaptive multimodal
+tuning, §3.2) loss compositions, plus the local-step factory used both by the
+federated simulator and the SPMD trainer.
+
+f_ccl  (Eq. 11): L = L_lb(D') + ½(L^A2O + L^O2A)    — public data, with anchor
+f_amt  (Eq. 12): L = L_lb(D)                         — private data, LoRA only
+"""
+from __future__ import annotations
+
+from functools import partial as fpartial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import connector as conn
+from repro.core import lora
+from repro.core.gram import contrastive_loss
+from repro.models.model import ModelBundle
+from repro.optim.adamw import Optimizer, apply_updates
+
+
+def init_unified(key, bundle: ModelBundle):
+    """The unified model M = {E(stub feats), C(connector), B(backbone)}."""
+    k1, k2 = jax.random.split(key)
+    params = bundle.init(k1)
+    if bundle.cfg.n_modalities > 0:
+        params["connector"] = conn.init_connector(k2, bundle.cfg)
+    return params
+
+
+def mlecs_loss(params, bundle: ModelBundle, batch: Dict,
+               anchor: Optional[jnp.ndarray] = None,
+               ccl_weight: float = 0.5, n_negatives: int = 8,
+               ccl_score: str = "volume"):
+    """The paper's device loss.  With ``anchor`` provided (server-fused
+    omni-modal reps on the public dataset) this is f_ccl (Eq. 11); with
+    ``anchor=None`` and ccl_weight=0 it degrades to f_amt (Eq. 12).
+
+    Returns (loss, metrics); metrics include the fused representation so the
+    server can collect anchors from its own omni-modal pass.
+    """
+    cfg = bundle.cfg
+    fused = None
+    if cfg.n_modalities > 0 and "modality_feats" in batch:
+        soft, mods, fused = conn.connector_prefix(
+            params["connector"], cfg, batch["modality_feats"],
+            batch["modality_mask"])
+        batch = dict(batch, prefix_embeds=soft)
+        lm, metrics = bundle.lm_loss(params, batch)
+        loss = lm
+        if ccl_weight > 0.0:
+            anc = anchor if anchor is not None else fused
+            if ccl_score == "cosine":       # prior-work ablation (§3.1)
+                from repro.core.gram import pairwise_cosine_loss
+                cl = pairwise_cosine_loss(anc, mods,
+                                          batch["modality_mask"],
+                                          n_negatives)
+            else:
+                cl = contrastive_loss(anc, mods, batch["modality_mask"],
+                                      n_negatives)
+            loss = loss + ccl_weight * 2.0 * cl * 0.5   # ½(O2A+A2O) inside
+            metrics = dict(metrics, ccl=cl)
+    else:
+        loss, metrics = bundle.lm_loss(params, batch)
+    metrics = dict(metrics, loss=loss)
+    return loss, (metrics, fused)
+
+
+def make_local_step(bundle: ModelBundle, optimizer: Optimizer,
+                    trainable: Callable[[str], bool] = lora.default_trainable,
+                    ccl_weight: float = 0.5, n_negatives: int = 8,
+                    with_anchor: bool = True, jit: bool = True,
+                    prox_weight: float = 0.0, ccl_score: str = "volume"):
+    """One device-side SGD step over the *trainable subset only* — gradients
+    (and hence any cross-device reduction) touch just LoRA + connector.
+
+    ``prox_weight`` adds a FedProx-style term μ/2·||t - t_global||² toward
+    the last distributed global parameters — the adaptive-regularization
+    proxy used for the FedMLLM baseline comparison."""
+
+    def step(params, opt_state, batch, anchor=None, global_ref=None):
+        train = lora.partition(params, trainable)
+
+        def loss_fn(t):
+            full = lora.combine(params, t)
+            loss, (metrics, fused) = mlecs_loss(
+                full, bundle, batch,
+                anchor=anchor if with_anchor else None,
+                ccl_weight=ccl_weight, n_negatives=n_negatives,
+                ccl_score=ccl_score)
+            if prox_weight > 0.0 and global_ref is not None:
+                prox = sum(jnp.sum((a.astype(jnp.float32)
+                                    - global_ref[k].astype(jnp.float32)) ** 2)
+                           for k, a in t.items() if k in global_ref)
+                loss = loss + 0.5 * prox_weight * prox
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(train)
+        updates, opt_state = optimizer.update(grads, opt_state, train)
+        train = apply_updates(train, updates)
+        params = lora.combine(params, train)
+        return params, opt_state, metrics
+
+    return jax.jit(step, static_argnames=()) if jit else step
+
+
+def server_anchors(params, bundle: ModelBundle, batch: Dict):
+    """Fused omni-modal representations s' from the server's unified model
+    (Alg. 1 line 3) — distributed to devices as CCL anchors."""
+    cfg = bundle.cfg
+    h = conn.project_modalities(params["connector"], cfg,
+                                batch["modality_feats"],
+                                batch["modality_mask"])
+    return conn.fuse(params["connector"], cfg, h, batch["modality_mask"])

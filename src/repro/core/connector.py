@@ -1,0 +1,76 @@
+"""The unified model's connector module C (paper §3.1): per-modality
+projectors (Eq. 4), a fusion MLP (Eq. 9), and a soft-prompt generator
+(Eq. 10).  The soft prompt is prepended to the token embeddings of the LM
+backbone B.
+
+Modality representations live in a *shared* connector space of width
+``cfg.connector_dim`` (default d_model) — the CCL volume loss and the
+server-distributed anchors operate there, so heterogeneous backbones
+(SLM d=1280 vs LLM d=4096) still align in one latent space, exactly the
+paper's "unified latent space shared across all devices".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def _cdim(cfg: ModelConfig) -> int:
+    return cfg.connector_dim or cfg.d_model
+
+
+def init_connector(key, cfg: ModelConfig) -> dict:
+    """Connector params.  Requires cfg.n_modalities > 0."""
+    M, fd, d, c = cfg.n_modalities, cfg.modality_dim, cfg.d_model, _cdim(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # per-modality projector f^p_i (stacked), into the shared space
+        "proj_w": _dense_init(ks[0], (M, fd, c), cfg.param_dtype),
+        "proj_b": jnp.zeros((M, c), cfg.param_dtype),
+        # fusion MLP f_u (two layers, GeLU), stays in the shared space
+        "fuse_w1": _dense_init(ks[1], (M * c, c), cfg.param_dtype),
+        "fuse_w2": _dense_init(ks[2], (c, c), cfg.param_dtype),
+        # soft prompt generator f_spg: shared space -> backbone space
+        "spg_w1": _dense_init(ks[3], (c, d), cfg.param_dtype),
+        "spg_scale": jnp.ones((cfg.n_soft_tokens, d), cfg.param_dtype),
+        "spg_bias": _dense_init(ks[4], (cfg.n_soft_tokens, d),
+                                cfg.param_dtype, scale=0.02),
+    }
+
+
+def project_modalities(p, cfg: ModelConfig, feats, mask):
+    """Eq. 4: h_j(m_i) = f^p_i(z_j(m_i)).
+
+    feats: (B, M, fd) modality features from the (stub) extractors;
+    mask:  (B, M) bool availability (the MER Bernoulli draw).
+    Returns (B, M, c) with absent modalities zeroed.
+    """
+    h = jnp.einsum("bmf,mfd->bmd", feats.astype(p["proj_w"].dtype),
+                   p["proj_w"]) + p["proj_b"]
+    return h * mask[..., None].astype(h.dtype)
+
+
+def fuse(p, cfg: ModelConfig, h, mask):
+    """Eq. 9: fused multimodal representation s_j (B, c)."""
+    B = h.shape[0]
+    flat = (h * mask[..., None].astype(h.dtype)).reshape(B, -1)
+    return jax.nn.gelu(flat @ p["fuse_w1"]) @ p["fuse_w2"]
+
+
+def soft_prompt(p, cfg: ModelConfig, fused):
+    """Eq. 10: soft-prompt tokens (B, n_soft, d) prepended to the prompt."""
+    g = jax.nn.gelu(fused @ p["spg_w1"])                   # (B, d)
+    return g[:, None, :] * p["spg_scale"][None] + p["spg_bias"][None]
+
+
+def connector_prefix(p, cfg: ModelConfig, feats, mask
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full connector pass: returns (soft_tokens, modality_reps, fused)."""
+    h = project_modalities(p, cfg, feats, mask)
+    s = fuse(p, cfg, h, mask)
+    return soft_prompt(p, cfg, s), h, s

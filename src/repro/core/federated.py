@@ -1,0 +1,297 @@
+"""The ML-ECS federated orchestrator — Algorithm 1 end to end.
+
+One cloud server (unified LLM model + a server-side SLM) and N edge devices
+(unified SLM models with heterogeneous modality availability).  Per round t:
+
+  1. server generates fused omni-modal anchors s'(t) on the public dataset;
+  2. each device runs CCL (public data, anchored) then AMT (private data),
+     then uploads the LoRA params of its SLM backbone;
+  3. server aggregates uploads with MMA weights (Eq. 13) into its SLM;
+  4. server runs SE-CCL — bidirectional pooled-KL transfer between its SLM
+     and LLM on the public data (Eq. 15-16);
+  5. the server SLM's LoRA params are redistributed to every device.
+
+Ablation switches (use_mma / use_seccl / use_ccl) give the paper's Fig. 4
+variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ccl as ccl_lib
+from repro.core import lora, mma, seccl
+from repro.core.connector import connector_prefix
+from repro.data.multimodal import mer_partition, paper_split, train_test_split
+from repro.data.pipeline import batches, eval_batches
+from repro.models.model import ModelBundle, build_model
+from repro.optim.adamw import adamw, apply_updates
+
+
+@dataclasses.dataclass
+class FederatedConfig:
+    n_devices: int = 3
+    rounds: int = 5
+    local_steps_ccl: int = 4
+    local_steps_amt: int = 4
+    server_steps: int = 4
+    batch_size: int = 8
+    lr: float = 3e-3
+    rho: float = 0.7                 # modality existing rate (MER)
+    n_negatives: int = 4
+    seed: int = 0
+    # ablations / baselines
+    use_mma: bool = True             # False -> uniform averaging (w/o MMA)
+    use_seccl: bool = True           # False -> skip step 4     (w/o SE-CCL)
+    use_ccl: bool = True             # False -> devices skip step 2's loss
+    mode: str = "mlecs"              # mlecs | standalone | fedavg
+    kt_weight: float = 0.5
+    prox_weight: float = 0.0         # FedProx-style pull toward the global
+                                     # params (FedMLLM-baseline proxy)
+    ccl_score: str = "volume"        # volume (paper Eq. 5-8) | cosine
+                                     # (pairwise prior-work ablation)
+
+
+class FederatedRunner:
+    """Simulates the edge-cloud environment on host (the paper's N=3..20)."""
+
+    def __init__(self, cfg: FederatedConfig, slm_bundle: ModelBundle,
+                 llm_bundle: ModelBundle, corpus: Dict[str, np.ndarray]):
+        self.cfg = cfg
+        self.slm = slm_bundle
+        self.llm = llm_bundle
+        key = jax.random.key(cfg.seed)
+        keys = jax.random.split(key, cfg.n_devices + 2)
+
+        # data: public / private, train / test, modality masks
+        public, privates = paper_split(corpus, cfg.n_devices, cfg.seed)
+        self.public_train, self.public_test = train_test_split(
+            public, 0.1, cfg.seed)
+        self.priv_train, self.priv_test = [], []
+        for j, pv in enumerate(privates):
+            tr, te = train_test_split(pv, 0.1, cfg.seed + j + 1)
+            self.priv_train.append(tr)
+            self.priv_test.append(te)
+        M = corpus["modality_feats"].shape[1]
+        self.masks = mer_partition(cfg.seed, cfg.n_devices, M, cfg.rho)
+
+        # models
+        self.device_params = [
+            ccl_lib.init_unified(keys[j], self.slm)
+            for j in range(cfg.n_devices)]
+        self.server_llm = ccl_lib.init_unified(keys[-1], self.llm)
+        self.server_slm = ccl_lib.init_unified(keys[-2], self.slm)
+
+        # optimizers (trainable = LoRA + connector, the paper's AMT set)
+        opt = adamw(cfg.lr, weight_decay=0.0)
+        self.opt = opt
+        self.device_opt = [
+            opt.init(lora.partition(p)) for p in self.device_params]
+        self.server_llm_opt = opt.init(lora.partition(self.server_llm))
+        self.server_slm_opt = opt.init(lora.partition(self.server_slm))
+
+        ccl_w = 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
+        self._dev_ccl_step = ccl_lib.make_local_step(
+            self.slm, opt, ccl_weight=ccl_w, n_negatives=cfg.n_negatives,
+            ccl_score=cfg.ccl_score)
+        self._dev_amt_step = ccl_lib.make_local_step(
+            self.slm, opt, ccl_weight=0.0, with_anchor=False,
+            prox_weight=cfg.prox_weight)
+        self.last_global = lora.partition(self.server_slm, lora.is_lora_leaf)
+        self._anchor_fn = jax.jit(
+            lambda p, b: ccl_lib.server_anchors(p, self.llm, b))
+        self._se_step = self._make_seccl_step()
+
+        # data iterators
+        bs = cfg.batch_size
+        self.pub_iters = [
+            batches(self.public_train, bs, cfg.seed + 100 + j, self.masks[j])
+            for j in range(cfg.n_devices)]
+        self.pub_iter_server = batches(self.public_train, bs, cfg.seed + 999)
+        self.priv_iters = [
+            batches(self.priv_train[j], bs, cfg.seed + 200 + j, self.masks[j])
+            for j in range(cfg.n_devices)]
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _make_seccl_step(self):
+        """Joint SE-CCL update: LLM minimizes Eq. 15, SLM minimizes Eq. 16."""
+        cfg = self.cfg
+
+        def loss_pair(train_llm, train_slm, llm_params, slm_params, batch):
+            llm_full = lora.combine(llm_params, train_llm)
+            slm_full = lora.combine(slm_params, train_slm)
+            # random anchor modality: SE-CCL anchors on one of its own
+            # modality representations (omni-modal public data)
+            l_llm, (_, _) = ccl_lib.mlecs_loss(
+                llm_full, self.llm, batch, anchor=None,
+                ccl_weight=0.5 if cfg.use_ccl else 0.0,
+                n_negatives=cfg.n_negatives)
+            l_slm, (_, _) = ccl_lib.mlecs_loss(
+                slm_full, self.slm, batch, anchor=None, ccl_weight=0.0)
+            y_llm, _ = self.llm.logits(llm_full, batch)
+            y_slm, _ = self.slm.logits(slm_full, batch)
+            kt_llm = seccl.kt_loss(y_llm, y_slm)      # LLM learns from SLM
+            kt_slm = seccl.kt_loss(y_slm, y_llm)      # SLM learns from LLM
+            total = (l_llm + cfg.kt_weight * kt_llm
+                     + l_slm + cfg.kt_weight * kt_slm)
+            return total, {"llm": l_llm, "slm": l_slm,
+                           "kt_llm": kt_llm, "kt_slm": kt_slm}
+
+        def step(llm_params, slm_params, llm_opt, slm_opt, batch):
+            t_llm = lora.partition(llm_params)
+            t_slm = lora.partition(slm_params)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_pair, argnums=(0, 1), has_aux=True)(
+                    t_llm, t_slm, llm_params, slm_params, batch)
+            g_llm, g_slm = grads
+            u, llm_opt = self.opt.update(g_llm, llm_opt, t_llm)
+            llm_params = lora.combine(llm_params, apply_updates(t_llm, u))
+            u, slm_opt = self.opt.update(g_slm, slm_opt, t_slm)
+            slm_params = lora.combine(slm_params, apply_updates(t_slm, u))
+            return llm_params, slm_params, llm_opt, slm_opt, metrics
+
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> Dict:
+        """One communication round.  Client-side metrics are measured on the
+        post-AMT device models (the model a device actually serves between
+        rounds); server metrics after SE-CCL.  Redistribution (Alg. 1 step 5)
+        seeds the NEXT round's devices."""
+        cfg = self.cfg
+        # (2) device side: CCL then AMT
+        uploads, counts = [], []
+        for j in range(cfg.n_devices):
+            p, o = self.device_params[j], self.device_opt[j]
+            if cfg.mode != "standalone" and cfg.use_ccl:
+                for _ in range(cfg.local_steps_ccl):
+                    pub = next(self.pub_iters[j])
+                    anchor = self._anchor_fn(self.server_llm, dict(
+                        pub, modality_mask=jnp.ones_like(pub["modality_mask"]),
+                        modality_feats=pub["modality_feats"]))
+                    p, o, _ = self._dev_ccl_step(p, o, pub, anchor)
+            gref = self.last_global if cfg.prox_weight > 0 else None
+            for _ in range(cfg.local_steps_amt):
+                p, o, _ = self._dev_amt_step(p, o, next(self.priv_iters[j]),
+                                             None, gref)
+            self.device_params[j], self.device_opt[j] = p, o
+            uploads.append(lora.partition(p, lora.is_lora_leaf))
+            counts.append(int(self.masks[j].sum()))
+
+        client_eval = self._evaluate_clients()
+
+        if cfg.mode == "standalone":
+            return self._finalize_eval(client_eval)
+
+        # (3) MMA aggregation (Eq. 13) — or uniform for the ablation/fedavg
+        if cfg.use_mma and cfg.mode == "mlecs":
+            w = mma.aggregation_weights(counts)
+        else:
+            w = jnp.ones((cfg.n_devices,)) / cfg.n_devices
+        agg = mma.aggregate(uploads, w)
+
+        if cfg.mode == "fedavg":
+            # Multi-FedAvg: broadcast the average straight back
+            self.last_global = agg
+            for j in range(cfg.n_devices):
+                self.device_params[j] = lora.combine(self.device_params[j], agg)
+            return self._finalize_eval(client_eval)
+
+        self.server_slm = lora.combine(self.server_slm, agg)
+
+        # (4) SE-CCL on the server
+        if cfg.use_seccl:
+            for _ in range(cfg.server_steps):
+                batch = next(self.pub_iter_server)
+                (self.server_llm, self.server_slm, self.server_llm_opt,
+                 self.server_slm_opt, _) = self._se_step(
+                    self.server_llm, self.server_slm,
+                    self.server_llm_opt, self.server_slm_opt, batch)
+
+        # (5) redistribute server-SLM LoRA to devices
+        down = lora.partition(self.server_slm, lora.is_lora_leaf)
+        self.last_global = down
+        for j in range(cfg.n_devices):
+            self.device_params[j] = lora.combine(self.device_params[j], down)
+        return self._finalize_eval(client_eval)
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Dict]:
+        for _ in range(self.cfg.rounds):
+            self.history.append(self.run_round())
+        return self.history
+
+    # ------------------------------------------------------------------
+    def _evaluate_clients(self):
+        return [self._eval_model(self.device_params[j], self.slm,
+                                 self.priv_test[j], self.masks[j])
+                for j in range(self.cfg.n_devices)]
+
+    def _finalize_eval(self, client_eval=None) -> Dict:
+        out = {"client": client_eval or self._evaluate_clients(),
+               "server": self._eval_model(self.server_llm, self.llm,
+                                          self.public_test, None)}
+        cs = out["client"]
+        out["summary"] = {
+            "avg_acc": float(np.mean([c["acc"] for c in cs])),
+            "best_acc": float(np.max([c["acc"] for c in cs])),
+            "worst_acc": float(np.min([c["acc"] for c in cs])),
+            "avg_ce": float(np.mean([c["ce"] for c in cs])),
+            "server_acc": out["server"]["acc"],
+            "server_ce": out["server"]["ce"],
+        }
+        return out
+
+    def evaluate(self) -> Dict:
+        """Test CE + template accuracy (macro-F1 for the classification
+        analogue) per device and for the server unified model."""
+        out = {"client": [], "server": {}}
+        for j in range(self.cfg.n_devices):
+            out["client"].append(self._eval_model(
+                self.device_params[j], self.slm, self.priv_test[j],
+                self.masks[j]))
+        out["server"] = self._eval_model(
+            self.server_llm, self.llm, self.public_test, None)
+        cs = out["client"]
+        out["summary"] = {
+            "avg_acc": float(np.mean([c["acc"] for c in cs])),
+            "best_acc": float(np.max([c["acc"] for c in cs])),
+            "worst_acc": float(np.min([c["acc"] for c in cs])),
+            "avg_ce": float(np.mean([c["ce"] for c in cs])),
+            "server_acc": out["server"]["acc"],
+            "server_ce": out["server"]["ce"],
+        }
+        return out
+
+    def _eval_model(self, params, bundle: ModelBundle, data, mask) -> Dict:
+        ces, hits, total = [], 0, 0
+        bs = self.cfg.batch_size
+        n = data["tokens"].shape[0]
+        seen = 0
+        for batch in eval_batches(data, bs, mask):
+            soft, _, _ = connector_prefix(
+                params["connector"], bundle.cfg,
+                batch["modality_feats"], batch["modality_mask"])
+            loss, metrics = bundle.lm_loss(
+                params, dict(batch, prefix_embeds=soft))
+            ces.append(float(metrics["ce"]))
+            # template accuracy: argmax over the masked region
+            logits, _ = bundle.logits(params, dict(batch, prefix_embeds=soft))
+            P = logits.shape[1] - batch["tokens"].shape[1]
+            S = batch["tokens"].shape[1]
+            pred = jnp.argmax(logits[:, P:P + S - 1], axis=-1)
+            tgt = batch["tokens"][:, 1:]
+            m = batch["loss_mask"][:, 1:] > 0
+            valid = min(bs, n - seen)
+            m = m[:valid]
+            hits += int(jnp.sum((pred[:valid] == tgt[:valid]) & m))
+            total += int(jnp.sum(m))
+            seen += valid
+            if seen >= n:
+                break
+        return {"ce": float(np.mean(ces)), "acc": hits / max(total, 1)}

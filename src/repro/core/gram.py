@@ -1,0 +1,125 @@
+"""Gram-matrix vector volume and the cross-modal contrastive losses
+(paper Eq. 5-8, 11).
+
+``V({v_i}) = sqrt(det(G))`` with ``G = A Aᵀ`` (rows = vectors).  Small volume
+= aligned modalities.  Missing modalities (the paper's MER heterogeneity) are
+handled *exactly* by masking: absent rows/cols of G are replaced by identity
+rows, so ``det(G_masked) == det(G_present_submatrix)`` — the volume over the
+present subset, with no shape polymorphism.
+
+A Pallas TPU kernel for the batched volume lives in
+``repro.kernels.gram_volume`` and is validated against :func:`log_volume`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_matrix(vs, mask: Optional[jnp.ndarray] = None):
+    """vs: (..., k, d) -> masked Gram (..., k, k) in f32."""
+    v = vs.astype(jnp.float32)
+    # normalize: volume then measures angular dispersion, not magnitude.
+    # rsqrt(sq + eps) (not linalg.norm) so the gradient at an all-zero row
+    # (a masked-out modality) is finite — 0 * d(norm)/dv would be 0 * NaN
+    # under the where() mask otherwise.
+    sq = jnp.sum(v * v, axis=-1, keepdims=True)
+    v = v * jax.lax.rsqrt(sq + 1e-12)
+    g = jnp.einsum("...kd,...ld->...kl", v, v)
+    if mask is not None:
+        k = vs.shape[-2]
+        m = mask[..., :, None] & mask[..., None, :]
+        eye = jnp.eye(k, dtype=jnp.float32)
+        g = jnp.where(m, g, eye)
+    return g
+
+
+def log_volume(vs, mask: Optional[jnp.ndarray] = None,
+               eps: float = 1e-5):
+    """log V = 0.5 * logdet(G + eps I), via Cholesky (G is PSD)."""
+    g = gram_matrix(vs, mask)
+    k = g.shape[-1]
+    g = g + eps * jnp.eye(k, dtype=jnp.float32)
+    chol = jnp.linalg.cholesky(g)
+    diag = jnp.diagonal(chol, axis1=-2, axis2=-1)
+    return jnp.sum(jnp.log(diag), axis=-1)
+
+
+def volume(vs, mask: Optional[jnp.ndarray] = None):
+    return jnp.exp(log_volume(vs, mask))
+
+
+# ---------------------------------------------------------------------------
+# contrastive losses (Eq. 7, 8)
+
+def _candidate_volumes(anchor, mods, mask, n_negatives: int,
+                       roll_target: str):
+    """Volumes for the positive set and U in-batch negative sets.
+
+    anchor: (B, d)   mods: (B, M, d)   mask: (B, M) bool
+    roll_target: which side is replaced by other samples' vectors —
+      "mods"   -> O2A (Eq. 7): anchor fixed, other samples' modality sets
+      "anchor" -> A2O (Eq. 8): modality set fixed, other samples' anchors
+    Returns volumes (B, 1 + U); column 0 is the positive.
+    """
+    B = anchor.shape[0]
+    U = max(1, min(n_negatives, B - 1))
+
+    def vol(a, m, mk):
+        vs = jnp.concatenate([a[:, None, :], m], axis=1)       # (B, 1+M, d)
+        full_mask = jnp.concatenate(
+            [jnp.ones((B, 1), bool), mk], axis=1)
+        return log_volume(vs, full_mask)                        # (B,)
+
+    vols = [vol(anchor, mods, mask)]
+    for u in range(1, U + 1):
+        if roll_target == "mods":
+            vols.append(vol(anchor, jnp.roll(mods, u, axis=0),
+                            jnp.roll(mask, u, axis=0)))
+        else:
+            vols.append(vol(jnp.roll(anchor, u, axis=0), mods, mask))
+    return jnp.stack(vols, axis=-1)                             # (B, 1+U)
+
+
+def contrastive_loss(anchor, mods, mask, n_negatives: int = 8):
+    """Symmetric CCL loss ½(L^O2A + L^A2O) (Eq. 11's contrastive term).
+
+    InfoNCE over negated volumes: aligned (small-volume) positive sets score
+    high.  (The paper's Eq. 7-8 omit the conventional leading minus; we
+    minimize the negative log-softmax, which is the only sign under which
+    the loss decreases as modalities align.)
+    """
+    def one_side(roll_target):
+        lv = _candidate_volumes(anchor, mods, mask, n_negatives, roll_target)
+        logits = -lv                                            # small vol = high score
+        return -jax.nn.log_softmax(logits, axis=-1)[:, 0]
+    l_o2a = one_side("mods")
+    l_a2o = one_side("anchor")
+    return 0.5 * (jnp.mean(l_o2a) + jnp.mean(l_a2o))
+
+
+def pairwise_cosine_loss(anchor, mods, mask, n_negatives: int = 8,
+                         temperature: float = 0.1):
+    """The PRIOR-WORK alternative the paper argues against (§3.1): mean of
+    per-modality pairwise cosine InfoNCE against the anchor.  Pairwise
+    alignment scores each modality independently — it cannot express the
+    joint consistency of >2 modalities, which is exactly what the volume
+    captures.  Used by the beyond-paper ablation `benchmarks/gram_ablation`.
+    """
+    B, M, _ = mods.shape
+    U = max(1, min(n_negatives, B - 1))
+
+    def norm(v):
+        return v * jax.lax.rsqrt(jnp.sum(v * v, -1, keepdims=True) + 1e-12)
+
+    a = norm(anchor.astype(jnp.float32))                        # (B, d)
+    h = norm(mods.astype(jnp.float32))                          # (B, M, d)
+    sims = [jnp.einsum("bd,bmd->bm", a, h)]                     # positive
+    for u in range(1, U + 1):
+        sims.append(jnp.einsum("bd,bmd->bm", a, jnp.roll(h, u, axis=0)))
+    logits = jnp.stack(sims, axis=-1) / temperature             # (B, M, 1+U)
+    nll = -jax.nn.log_softmax(logits, axis=-1)[..., 0]          # (B, M)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,99 @@
+"""LoRA parameter handling (paper Eq. 1-2) and trainable/frozen partitioning.
+
+The trainable subtree is extracted as a *flat dict* keyed by '/'-joined
+paths.  ``jax.grad`` is taken over that flat dict only, so the gradient
+all-reduce in the SPMD train step touches exactly the communicated volume the
+paper claims (LoRA + connector ≈ 0.65 % of parameters) — the collective term
+of the roofline measures this directly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def is_lora_leaf(path: str) -> bool:
+    return "_lora_a" in path or "_lora_b" in path
+
+
+def default_trainable(path: str) -> bool:
+    """The paper's AMT trainable set: LoRA adapters + the multimodal
+    connector + the (stub) frontend projector."""
+    return (is_lora_leaf(path) or path.startswith("connector")
+            or path.startswith("frontend"))
+
+
+def all_trainable(path: str) -> bool:
+    """Full fine-tune (the Multi-FedAvg baseline)."""
+    return True
+
+
+def partition(params, predicate: Callable[[str], bool] = default_trainable
+              ) -> Dict[str, jnp.ndarray]:
+    """Extract the trainable leaves as a flat {path: leaf} dict."""
+    out = {}
+
+    def visit(path, leaf):
+        s = path_str(path)
+        if predicate(s):
+            out[s] = leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return out
+
+
+def combine(params, trainable: Dict[str, jnp.ndarray]):
+    """Re-insert trainable leaves into the full parameter tree."""
+    def pick(path, leaf):
+        return trainable.get(path_str(path), leaf)
+    return jax.tree_util.tree_map_with_path(pick, params)
+
+
+def n_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def communicated_fraction(params,
+                          predicate: Callable[[str], bool] = is_lora_leaf
+                          ) -> float:
+    """Fraction of total parameter volume communicated per round (paper
+    Fig. 3: 0.65 % for the r=8 SLM)."""
+    comm = n_params(partition(params, lambda p: predicate(p)))
+    return comm / max(1, n_params(params))
+
+
+def merge_lora(params, cfg):
+    """Fold LoRA updates into the frozen weights (W' = W + (α/r) BA) —
+    used before serving so decode pays no adapter cost."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    by_path = {path_str(p): (p, leaf) for p, leaf in flat}
+    scale = cfg.lora_alpha / cfg.lora_rank
+    new = {}
+    for s, (p, leaf) in by_path.items():
+        if is_lora_leaf(s):
+            new[s] = leaf
+            continue
+        a_key, b_key = s + "_lora_a", s + "_lora_b"
+        if a_key in by_path:
+            a = by_path[a_key][1]
+            b = by_path[b_key][1]
+            leaf = (leaf.astype(jnp.float32)
+                    + scale * (a.astype(jnp.float32)
+                               @ b.astype(jnp.float32))).astype(leaf.dtype)
+        new[s] = leaf
+    leaves = [new[path_str(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

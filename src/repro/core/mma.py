@@ -1,0 +1,47 @@
+"""MMA — modality-aware model aggregation (§3.3, Eq. 13).
+
+Two forms:
+  * host-level: weighted average of uploaded LoRA flat-dicts (the federated
+    simulator / true edge deployment);
+  * SPMD form: per-example modality counts become weights in the gradient
+    all-reduce of the distributed train step (mathematically identical when
+    clients map to data-parallel subgroups).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregation_weights(n_modalities: Sequence[int]) -> jnp.ndarray:
+    """w_j = |M_j| / sum_i |M_i|   (Eq. 13)."""
+    m = jnp.asarray(n_modalities, jnp.float32)
+    return m / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def aggregate(uploads: List[Dict[str, jnp.ndarray]],
+              weights) -> Dict[str, jnp.ndarray]:
+    """Weighted average of client LoRA flat-dicts."""
+    weights = jnp.asarray(weights, jnp.float32)
+    assert len(uploads) == weights.shape[0]
+    keys = uploads[0].keys()
+    out = {}
+    for k in keys:
+        acc = sum(w * u[k].astype(jnp.float32)
+                  for w, u in zip(weights, uploads))
+        out[k] = acc.astype(uploads[0][k].dtype)
+    return out
+
+
+def mma_psum_weights(modality_counts, axis_names):
+    """SPMD weighting: normalize per-shard modality counts across the data
+    axes so a weighted psum implements Eq. 13 exactly.
+
+    modality_counts: (local_batch,) int32 — |M_j| for the examples this
+    shard owns.  Returns scalar weight for this shard's gradient.
+    """
+    local = jnp.sum(modality_counts.astype(jnp.float32))
+    total = jax.lax.psum(local, axis_names)
+    return local / jnp.maximum(total, 1.0)

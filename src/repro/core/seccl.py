@@ -1,0 +1,56 @@
+"""SE-CCL — SLM-enhanced cross-modal contrastive learning (§3.4).
+
+Bidirectional knowledge transfer between the server SLM and the cloud LLM via
+a pooling-based KL on output logits (Eq. 14), combined with the CCL loss on
+the omni-modal public dataset (Eq. 15-16).
+
+Pooling handles both divergence axes the paper cites: sequence-length
+mismatch (average-pool to S = min(S1, S2)) and sparse-output "divergence
+singularities" (temperature-smoothed f32 softmax).  Vocab mismatch between
+heterogeneous backbones is handled by average-pooling the vocab axis to the
+smaller vocabulary (the Co-PLMs-style structure-agnostic bridge).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pool_axis(x, target: int, axis: int):
+    """Average-pool dimension ``axis`` down to exactly ``target`` bins."""
+    n = x.shape[axis]
+    if n == target:
+        return x
+    assert n >= target
+    # crop to a multiple, then mean-pool
+    crop = (n // target) * target
+    x = jax.lax.slice_in_dim(x, 0, crop, axis=axis)
+    new_shape = list(x.shape)
+    new_shape[axis:axis + 1] = [target, crop // target]
+    return jnp.mean(x.reshape(new_shape), axis=axis + 1)
+
+
+def pooled_kl(student_logits, teacher_logits, temperature: float = 2.0):
+    """Eq. 14: sum_i KLD(student_i || teacher_i) over pooled positions.
+
+    logits: (B, S, V) with possibly different S and V.
+    """
+    S = min(student_logits.shape[1], teacher_logits.shape[1])
+    V = min(student_logits.shape[2], teacher_logits.shape[2])
+    s = _pool_axis(_pool_axis(student_logits.astype(jnp.float32), S, 1), V, 2)
+    t = _pool_axis(_pool_axis(teacher_logits.astype(jnp.float32), S, 1), V, 2)
+    s = s / temperature
+    t = t / temperature
+    logp_s = jax.nn.log_softmax(s, axis=-1)
+    p_t = jax.nn.softmax(t, axis=-1)
+    logp_t = jax.nn.log_softmax(t, axis=-1)
+    kl = jnp.sum(p_t * (logp_t - logp_s), axis=-1)        # (B, S)
+    return jnp.mean(jnp.sum(kl, axis=-1))
+
+
+def kt_loss(y_student, y_teacher, temperature: float = 2.0):
+    """KT with stop-gradient on the teacher side (each model's loss treats
+    the other as fixed within the step, per Eq. 15/16)."""
+    return pooled_kl(y_student, jax.lax.stop_gradient(y_teacher), temperature)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import synthetic_multimodal_corpus
+from repro.data.multimodal import mer_partition, paper_split
+from repro.data.pipeline import batches, eval_batches

@@ -1,0 +1,55 @@
+"""Modality-heterogeneity partition (paper §4.1).
+
+MER (modality existing rate) rho: each device possesses modality m with
+probability Bernoulli(rho) — a device-level draw, matching the paper's
+"variations in both the number and combinations of modalities available
+across devices".  At least one modality is always kept.
+
+Data split: 3/4 private (across devices), 1/4 public; 90/10 train/test.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def mer_partition(seed: int, n_devices: int, n_modalities: int,
+                  rho: float) -> np.ndarray:
+    """(n_devices, n_modalities) bool availability masks."""
+    rng = np.random.default_rng(seed)
+    masks = rng.random((n_devices, n_modalities)) < rho
+    for j in range(n_devices):
+        if not masks[j].any():
+            masks[j, rng.integers(n_modalities)] = True
+    return masks
+
+
+def _slice(data: Dict[str, np.ndarray], idx) -> Dict[str, np.ndarray]:
+    n = data["tokens"].shape[0]
+    return {k: (v[idx] if isinstance(v, np.ndarray) and v.shape[:1] == (n,)
+                else v) for k, v in data.items()}
+
+
+def paper_split(data: Dict[str, np.ndarray], n_devices: int, seed: int
+                ) -> Tuple[Dict, List[Dict]]:
+    """Returns (public, [private_j]) with the paper's quarter/three-quarter
+    allocation."""
+    n = data["tokens"].shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_pub = n // 4
+    public = _slice(data, perm[:n_pub])
+    rest = perm[n_pub:]
+    shards = np.array_split(rest, n_devices)
+    privates = [_slice(data, s) for s in shards]
+    return public, privates
+
+
+def train_test_split(data: Dict[str, np.ndarray], test_frac: float = 0.1,
+                     seed: int = 0) -> Tuple[Dict, Dict]:
+    n = data["tokens"].shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_test = max(1, int(n * test_frac))
+    return _slice(data, perm[n_test:]), _slice(data, perm[:n_test])

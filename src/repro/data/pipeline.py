@@ -1,0 +1,49 @@
+"""Batching: numpy -> jnp device batches with per-device modality masks."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _to_batch(data: Dict[str, np.ndarray], idx, modality_mask: Optional[np.ndarray]):
+    b = {
+        "tokens": jnp.asarray(data["tokens"][idx]),
+        "loss_mask": jnp.asarray(data["loss_mask"][idx]),
+        "modality_feats": jnp.asarray(data["modality_feats"][idx]),
+        "label": jnp.asarray(data["label"][idx]),
+        "template_start": jnp.asarray(data["template_start"][idx]),
+    }
+    B, M = b["modality_feats"].shape[:2]
+    if modality_mask is None:
+        mm = np.ones((B, M), bool)
+    else:
+        mm = np.broadcast_to(np.asarray(modality_mask, bool), (B, M))
+    b["modality_mask"] = jnp.asarray(mm)
+    # zero features the device cannot observe
+    b["modality_feats"] = b["modality_feats"] * b["modality_mask"][..., None]
+    return b
+
+
+def batches(data: Dict[str, np.ndarray], batch_size: int, seed: int = 0,
+            modality_mask: Optional[np.ndarray] = None
+            ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Infinite shuffled batch iterator."""
+    n = data["tokens"].shape[0]
+    rng = np.random.default_rng(seed)
+    while True:
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            yield _to_batch(data, perm[i:i + batch_size], modality_mask)
+
+
+def eval_batches(data: Dict[str, np.ndarray], batch_size: int,
+                 modality_mask: Optional[np.ndarray] = None
+                 ) -> Iterator[Dict[str, jnp.ndarray]]:
+    n = data["tokens"].shape[0]
+    for i in range(0, n, batch_size):
+        idx = np.arange(i, min(i + batch_size, n))
+        if len(idx) < batch_size:      # pad to keep shapes static
+            idx = np.concatenate([idx, np.full(batch_size - len(idx), idx[-1])])
+        yield _to_batch(data, idx, modality_mask)

@@ -1,0 +1,92 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on real TPU
+backends — the kernels are written for TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and *validated* in interpret mode against the pure-jnp oracles in
+``ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gram_volume import gram_log_volume as _gram
+from repro.kernels.lora_matmul import lora_matmul as _lora
+from repro.kernels.ssd_scan import ssd_chunk as _ssd_chunk
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              bq: int = 128, bk: int = 128, interpret=None):
+    """GQA-aware flash attention.  q: (B,Sq,H,D)  k,v: (B,Sk,K,D) —
+    model-layout (seq before heads); handles the head expansion."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    out = _flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                 bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3).reshape(B, Sq, H * D)
+
+
+def gram_log_volume(vs, mask=None, eps: float = 1e-5, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    B = vs.shape[0]
+    bb = B if B <= 128 else 128
+    while B % bb:
+        bb -= 1
+    return _gram(vs, mask, eps=eps, bb=bb, interpret=interpret)
+
+
+def lora_matmul(x, w, a, b, scale: float = 1.0, interpret=None, **blocks):
+    interpret = default_interpret() if interpret is None else interpret
+    return _lora(x, w, a, b, scale=scale, interpret=interpret, **blocks)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, interpret=None):
+    """Full SSD over (B,S,...) using the intra-chunk kernel + jnp recurrence.
+    Same contract as models.ssm.ssd_reference."""
+    interpret = default_interpret() if interpret is None else interpret
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    nc, L = S // chunk, chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz * nc, L, H, P).transpose(0, 2, 1, 3)
+    dtc = dt.reshape(Bsz * nc, L, H).transpose(0, 2, 1).astype(f32)
+    Bc = jnp.repeat(B_.reshape(Bsz * nc, L, G, N), rep, axis=2) \
+        .transpose(0, 2, 1, 3)
+    Cc = jnp.repeat(C_.reshape(Bsz * nc, L, G, N), rep, axis=2) \
+        .transpose(0, 2, 1, 3)
+    da = dtc * A[None, :, None]
+    cum = jnp.cumsum(da, axis=-1)
+
+    y_intra, states = _ssd_chunk(xc, dtc, cum, Bc, Cc, interpret=interpret)
+
+    # inter-chunk recurrence in jnp (cheap): states (B*nc, H, P, N)
+    states = states.reshape(Bsz, nc, H, P, N)
+    total = cum[:, :, -1].reshape(Bsz, nc, H)
+
+    def step(h, inp):
+        st, tot = inp
+        return jnp.exp(tot)[:, :, None, None] * h + st, h
+    h0 = jnp.zeros((Bsz, H, P, N), f32)
+    _, h_prev = jax.lax.scan(step, h0, (states.transpose(1, 0, 2, 3, 4),
+                                        total.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bchln,bchpn->bchlp",
+                         Cc.reshape(Bsz, nc, H, L, N)
+                         * jnp.exp(cum).reshape(Bsz, nc, H, L)[..., None],
+                         h_prev)
+    y = y_intra.reshape(Bsz, nc, H, L, P) + y_inter
+    return y.transpose(0, 1, 3, 2, 4).reshape(Bsz, S, H, P).astype(x.dtype)

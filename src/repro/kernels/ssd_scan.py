@@ -1,0 +1,75 @@
+"""Mamba2 SSD intra-chunk Pallas kernel.
+
+Computes, per (batch*chunk, head) grid cell, the attention-dual intra-chunk
+term and the end-of-chunk state:
+
+  y[i]   = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+  state  = sum_j exp(cum_L - cum_j) dt_j outer(x_j, B_j)
+
+The (L, L) decay matrix lives only in VMEM; the two matmuls (C Bᵀ masked,
+then @ X) hit the MXU.  The cross-chunk recurrence stays in jnp
+(``lax.scan`` over ~S/L steps) — it is O(S/L · H·P·N), bandwidth-trivial.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref,
+                *, L: int):
+    x = x_ref[0, 0].astype(jnp.float32)                 # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)               # (L,)
+    cum = cum_ref[0, 0].astype(jnp.float32)             # (L,)
+    B_ = b_ref[0, 0].astype(jnp.float32)                # (L, N)
+    C_ = c_ref[0, 0].astype(jnp.float32)                # (L, N)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    causal = ii >= jj
+    decay = jnp.where(causal, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = jnp.dot(C_, B_.T, preferred_element_type=jnp.float32)   # (L, L)
+    att = cb * decay * dt[None, :]
+    y_ref[0, 0] = jnp.dot(att, x,
+                          preferred_element_type=jnp.float32
+                          ).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum) * dt                       # (L,)
+    st_ref[0, 0] = jnp.dot((x * decay_end[:, None]).T, B_,
+                           preferred_element_type=jnp.float32)    # (P, N)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, cum, B_, C_, interpret: bool = True):
+    """Intra-chunk SSD for all chunks/heads at once.
+
+    x: (BC, H, L, P)  dt, cum: (BC, H, L)  B_, C_: (BC, H, L, N)
+    Returns (y (BC,H,L,P), states (BC,H,P,N)).
+    """
+    BC, H, L, P = x.shape
+    N = B_.shape[-1]
+    kernel = functools.partial(_ssd_kernel, L=L)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(BC, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, L), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, L), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, H, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, cum, B_, C_)
+    return y, st

@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, extract memory/cost analysis and the collective
+schedule, and derive the three roofline terms.
+
+This file MUST set XLA_FLAGS before any jax import (device count locks on
+first init) — hence the module docstring below the os.environ lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch ... --full-finetune
+Outputs one JSON per combo under experiments/dryrun/.
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.core import lora as lora_lib                            # noqa: E402
+from repro.launch import specs as S                                # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,    # noqa: E402
+                               make_production_mesh, n_chips)
+from repro.launch.serve import make_serve_step                     # noqa: E402
+from repro.launch.train import make_train_step                     # noqa: E402
+from repro.models.model import build_model                         # noqa: E402
+from repro.optim.adamw import adamw                                # noqa: E402
+from repro.sharding.partition import (param_pspecs,                # noqa: E402
+                                      sharding_context)
+from repro.sharding.rules import rules_for                         # noqa: E402
+
+ASSIGNED = [a for a in ARCH_IDS if not a.startswith("mlecs")]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "u64": 8,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes over all array shapes in the string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(%?[\w.\-]+)\s+\([^)]*\)\s*->.*\{")
+
+
+def collective_bytes(hlo_text: str, scan_trips: int = 1) -> dict:
+    """Per-device collective traffic estimate from the post-SPMD HLO.
+
+    Ring estimates: all-gather ~= out*(g-1)/g, all-reduce ~= 2*out*(g-1)/g,
+    reduce-scatter ~= out*(g-1), all-to-all ~= out*(g-1)/g, permute = out.
+
+    XLA's HLO contains the body of a ``lax.scan`` (the layer loop) ONCE;
+    collectives inside while-loop bodies are therefore multiplied by
+    ``scan_trips`` (the layer count).  This is approximate — nested scans
+    (e.g. the SSD chunk recurrence) are not double-multiplied — and is
+    flagged in EXPERIMENTS.md.
+    """
+    per_op = {}
+    total = 0.0
+    comp = ""
+    for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            comp = cm.group(1)
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        mult = scan_trips if ("body" in comp or "while" in comp) else 1
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if "-start(" in line and "(" in shape_str:
+            # async start returns (in, out, ...) tuples; take half
+            nbytes = nbytes // 2
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            moved = 2.0 * nbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = float(nbytes) * (g - 1)
+        elif op == "collective-permute":
+            moved = float(nbytes)
+        else:          # all-gather, all-to-all
+            moved = float(nbytes) * (g - 1) / g
+        moved *= mult
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += moved
+        total += moved
+    return {"total_bytes": total, "per_op": per_op}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and "{" not in k
+            and not k.startswith("utilization")}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D = batch
+    (one token each)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def _apply_overrides(cfg, overrides):
+    import dataclasses
+    if not overrides:
+        return cfg
+    kw = {}
+    for ov in overrides:
+        k, v = ov.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               full_finetune: bool = False, ccl_weight: float = 0.5,
+               use_mma: bool = True, extra_tag: str = "",
+               overrides=None) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = S.variant_for_shape(get_config(arch), shape)
+    cfg = _apply_overrides(cfg, overrides)
+    bundle = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = "train" if shape.kind == "train" else (
+        "decode" if shape.kind == "decode" else "prefill")
+    rules = rules_for("train" if kind != "decode" else "decode", multi_pod)
+
+    t0 = time.time()
+    with sharding_context(mesh, rules):
+        params_st = S.model_structs(bundle)
+        p_specs = param_pspecs(params_st, rules, mesh)
+        p_sh = S.shardings(p_specs, mesh)
+
+        if shape.kind == "train":
+            opt = adamw(1e-4)
+            step = make_train_step(bundle, opt, full_finetune=full_finetune,
+                                   ccl_weight=ccl_weight,
+                                   use_mma_weights=use_mma)
+            pred = (lora_lib.all_trainable if full_finetune
+                    else lora_lib.default_trainable)
+            train_st = jax.eval_shape(
+                lambda p: lora_lib.partition(p, pred), params_st)
+            opt_st = jax.eval_shape(opt.init, train_st)
+            t_specs = param_pspecs(train_st, rules, mesh)
+            o_specs = {"step": P(), "mu": t_specs, "nu": t_specs}
+            o_sh = S.shardings(o_specs, mesh)
+            b_st = S.train_batch_structs(cfg, shape)
+            b_sh = S.shardings(S.train_batch_pspecs(cfg, rules), mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None))
+            lowered = jitted.lower(params_st, opt_st, b_st)
+
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return bundle.prefill(params, batch)
+            b_st = {"tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32)}
+            b_specs = {"tokens": rules.spec("batch", None)}
+            if cfg.frontend:
+                b_st["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.frontend_tokens,
+                     cfg.frontend_dim), cfg.param_dtype)
+                b_specs["frontend_embeds"] = rules.spec("batch", None, None)
+            cache_st = jax.eval_shape(bundle.prefill, params_st, b_st)[1]
+            c_specs = S.cache_pspecs(cfg, cache_st, mesh, multi_pod)
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(p_sh, S.shardings(b_specs, mesh)),
+                out_shardings=(NamedSharding(mesh, P()),
+                               S.shardings(c_specs, mesh)))
+            lowered = jitted.lower(params_st, b_st)
+
+        else:  # decode
+            serve = make_serve_step(bundle)
+            cache_st = jax.eval_shape(
+                lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+            c_specs = S.cache_pspecs(cfg, cache_st, mesh, multi_pod)
+            c_sh = S.shardings(c_specs, mesh)
+            toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            dsz = mesh.devices.shape[-2]
+            tok_spec = P(rules.axis("batch"), None) \
+                if shape.global_batch % dsz == 0 else P(None, None)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(p_sh, c_sh, NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, P(tok_spec[0], "model")),
+                               c_sh))
+            lowered = jitted.lower(params_st, cache_st, toks, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    chips = n_chips(mesh)
+    cost = _cost_dict(compiled)
+    mem = _mem_dict(compiled)
+    # scan-iteration count: the banded/grouped path unrolls `global_every`
+    # layers per scan body, so the body appears once per GROUP in the HLO.
+    lpb = 1
+    if (cfg.attn_impl == "banded" and cfg.sliding_window
+            and cfg.global_every and cfg.family != "ssm"):
+        lpb = cfg.global_every
+    trips = cfg.n_layers // lpb + cfg.n_enc_layers
+    coll = collective_bytes(compiled.as_text(), scan_trips=trips)
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    mf = model_flops(cfg, shape)
+    # analytic terms: the HLO numbers count scan bodies once, so we also
+    # report model-level estimates (see EXPERIMENTS.md "methodology").
+    param_bytes_dev = 2.0 * cfg.n_params() / chips      # bf16
+    reads = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[shape.kind]
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS_BF16,
+        "compute_s_analytic": (mf / chips) / PEAK_FLOPS_BF16,
+        "memory_s": bytes_dev / HBM_BW,
+        "memory_s_analytic": reads * param_bytes_dev / HBM_BW,
+        "collective_s": coll["total_bytes"] / ICI_BW,
+    }
+    dom = max(("compute_s_analytic", "memory_s_analytic", "collective_s"),
+              key=lambda k: terms[k])
+    res = {
+        "arch": arch, "shape": shape_name, "variant": cfg.name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": shape.kind,
+        "mode": ("full_ft" if full_finetune else "mlecs") + extra_tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_analysis": cost, "memory_analysis": mem,
+        "collectives": coll,
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / chips,
+        "useful_flops_frac": (mf / chips) / flops_dev if flops_dev else None,
+        "roofline": {**terms, "dominant": dom},
+        "layers_per_body": lpb,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "n_lora_params": cfg.n_lora_params(),
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED + ["mlecs-slm-720m",
+                                                  "mlecs-llm-6b"])
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--full-finetune", action="store_true",
+                    help="Multi-FedAvg baseline (all-param gradients)")
+    ap.add_argument("--no-mma", action="store_true")
+    ap.add_argument("--ccl-weight", type=float, default=0.5)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="config override key=value (e.g. moe_impl=sharded)")
+    ap.add_argument("--tag", default="", help="suffix for the output file")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shp in combos:
+        tag = "__mp" if args.multi_pod else ""
+        mode = "__fft" if args.full_finetune else ""
+        if args.tag:
+            mode += f"__{args.tag}"
+        name = f"{arch}__{shp}{tag}{mode}.json"
+        path = os.path.join(args.out_dir, name)
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {name}")
+            continue
+        print(f"[dryrun] {arch} x {shp} mesh="
+              f"{'2x16x16' if args.multi_pod else '16x16'} ...", flush=True)
+        try:
+            res = dryrun_one(arch, shp, args.multi_pod, args.full_finetune,
+                             ccl_weight=args.ccl_weight,
+                             use_mma=not args.no_mma,
+                             extra_tag=f"__{args.tag}" if args.tag else "",
+                             overrides=args.overrides)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res["roofline"]
+            print(f"  OK lower={res['lower_s']}s compile={res['compile_s']}s "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s dom={r['dominant']}",
+                  flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shp, str(e)[:200]))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Target: TPU v5e-class pods — 16x16 = 256 chips per pod, 2 pods = 512 chips.
+Functions (not module constants) so importing never touches jax device
+state; the dry-run launcher sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12         # FLOP/s
+HBM_BW = 819e9                   # B/s
+ICI_BW = 50e9                    # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs of the same SPMD code."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

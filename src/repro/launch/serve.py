@@ -1,0 +1,81 @@
+"""Serving entry points: prefill + batched decode steps (LoRA merged).
+
+``serve_step`` is the unit the decode-shape dry-runs lower: ONE new token
+against a KV cache of the assigned seq_len.  ``generate`` drives a host-scale
+autoregressive loop for the examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora
+from repro.models.model import ModelBundle
+
+
+def make_serve_step(bundle: ModelBundle):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = bundle.decode_step(params, cache, tokens, pos)
+        return logits, cache
+    return serve_step
+
+
+def make_prefill(bundle: ModelBundle):
+    def prefill(params, batch):
+        return bundle.prefill(params, batch)
+    return prefill
+
+
+def generate(bundle: ModelBundle, params, prompt_tokens, max_new: int = 32,
+             temperature: float = 0.0, key=None,
+             batch_extra: Optional[Dict] = None, merge: bool = True):
+    """Host-scale greedy/temperature sampling loop."""
+    if merge:
+        params = lora.merge_lora(params, bundle.cfg)
+    B, S = prompt_tokens.shape
+    total = S + max_new
+    cache = bundle.init_cache(B, total)
+    batch = {"tokens": prompt_tokens, **(batch_extra or {})}
+    last_logits, prefill_cache = bundle.prefill(params, batch)
+    # prefill produced a cache sized for S; re-seat into the serving cache
+    cache = _reseat_cache(cache, prefill_cache)
+    step = jax.jit(make_serve_step(bundle))
+
+    out = []
+    logits = last_logits
+    pos = S
+    if key is None:
+        key = jax.random.key(0)
+    for _ in range(max_new):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        tok = tok[:, None].astype(jnp.int32)
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+        pos += 1
+    return jnp.concatenate(out, axis=1)
+
+
+def _reseat_cache(big: Dict, small: Dict) -> Dict:
+    """Copy a prefill cache (capacity S) into the serving cache (capacity
+    S+max_new) slot-aligned at the front."""
+    out = dict(big)
+    for name in small:
+        if name not in big:
+            out[name] = small[name]
+            continue
+        b, s = big[name], small[name]
+        if b.shape == s.shape:
+            out[name] = s
+        elif name in ("k", "v"):
+            out[name] = jax.lax.dynamic_update_slice_in_dim(b, s, 0, axis=2)
+        elif name == "pos":
+            out[name] = jax.lax.dynamic_update_slice_in_dim(b, s, 0, axis=1)
+        else:
+            out[name] = s
+    return out

@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpec trees for every model input —
+the dry-run lowers against these (no allocation, weak-type-correct).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import ccl as ccl_lib
+from repro.models.model import ModelBundle
+from repro.sharding.partition import param_pspecs
+from repro.sharding.rules import Rules
+
+
+def _cdim(cfg: ModelConfig) -> int:
+    return cfg.connector_dim or cfg.d_model
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k on full-attention archs runs the documented sliding-window
+    variant (ring KV cache) — see DESIGN.md §long_500k applicability."""
+    if (shape.name == "long_500k" and cfg.family not in ("ssm",)
+            and cfg.sliding_window == 0):
+        return dataclasses.replace(cfg, name=cfg.name + "-swa",
+                                   sliding_window=4096)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+
+def train_batch_structs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    M, fd = cfg.n_modalities, cfg.modality_dim
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    if M > 0:
+        out["modality_feats"] = jax.ShapeDtypeStruct((B, M, fd), jnp.float32)
+        out["modality_mask"] = jax.ShapeDtypeStruct((B, M), jnp.bool_)
+        out["anchor"] = jax.ShapeDtypeStruct((B, _cdim(cfg)), jnp.float32)
+    if cfg.frontend:
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), cfg.param_dtype)
+    return out
+
+
+def train_batch_pspecs(cfg: ModelConfig, rules: Rules) -> Dict:
+    b = rules.axis("batch")
+    out = {"tokens": P(b, None), "loss_mask": P(b, None)}
+    if cfg.n_modalities > 0:
+        out["modality_feats"] = P(b, None, None)
+        out["modality_mask"] = P(b, None)
+        out["anchor"] = P(b, None)
+    if cfg.frontend:
+        out["frontend_embeds"] = P(b, None, None)
+    return out
+
+
+def decode_batch_structs(cfg: ModelConfig, shape: InputShape
+                         ) -> Tuple[Dict, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"tokens": toks, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# cache specs (divisibility-aware)
+
+def _div(n: int, size: int) -> bool:
+    return n % size == 0 and n >= size
+
+
+def cache_pspecs(cfg: ModelConfig, cache_structs, mesh: Mesh,
+                 multi_pod: bool) -> Dict:
+    from repro.sharding.partition import kv_cache_axes
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsz, msz = sizes.get("data", 1), sizes.get("model", 1)
+
+    def kv_spec(s):      # (L, B, Sc, K, hd)
+        _, B, Sc, K, _ = s.shape
+        b_ax, s_ax, k_ax = kv_cache_axes(B, Sc, K, sizes, multi_pod)
+        return P(None, b_ax, s_ax, k_ax, None)
+
+    specs = {}
+    for name, s in cache_structs.items():
+        if name in ("k", "v"):
+            specs[name] = kv_spec(s)
+        elif name in ("cross_k", "cross_v"):
+            _, B, T, K, _ = s.shape
+            b_ax = ("data",) if _div(B, dsz) else None
+            k_ax = "model" if _div(K, msz) else None
+            t_ax = None
+            if b_ax is None and _div(T, dsz):
+                t_ax = "data"
+            specs[name] = P(None, b_ax, t_ax, k_ax, None)
+        elif name == "pos":
+            specs[name] = P(None, None)   # tiny (L, Sc) int32; replicate
+        elif name == "ssm_h":            # (L, B, H, Pd, N)
+            _, B, H, Pd, _ = s.shape
+            b_ax = ("data",) if _div(B, dsz) else None
+            h_ax = "model" if _div(H, msz) else None
+            p_ax = "model" if (h_ax is None and _div(Pd, msz)) else None
+            specs[name] = P(None, b_ax, h_ax, p_ax, None)
+        elif name == "ssm_conv":         # (L, B, W-1, conv_dim)
+            _, B, _, cd = s.shape
+            b_ax = ("data",) if _div(B, dsz) else None
+            c_ax = "model" if _div(cd, msz) else None
+            specs[name] = P(None, b_ax, None, c_ax)
+        else:
+            specs[name] = P(*([None] * s.ndim))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer structs
+
+def model_structs(bundle: ModelBundle):
+    return jax.eval_shape(
+        lambda: ccl_lib.init_unified(jax.random.key(0), bundle))
+
+
+def pspecs_for(structs, rules: Rules):
+    return param_pspecs(structs, rules)
+
+
+def shardings(tree_pspec, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_pspec,
+        is_leaf=lambda x: isinstance(x, P))

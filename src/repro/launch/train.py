@@ -1,0 +1,190 @@
+"""SPMD trainer — the paper's technique as a first-class distributed step.
+
+``make_train_step`` builds the jit-able ML-ECS step for any assigned
+architecture:
+
+  * trainable set = LoRA adapters + multimodal connector (+frontend stub) —
+    so the gradient all-reduce moves only the paper's communicated volume
+    (~0.65 % of a full fine-tune; the roofline collective term measures it);
+  * loss = per-example CE weighted by MMA modality counts (Eq. 13 in its
+    SPMD form: clients = data-parallel subgroups) + the gram-volume CCL
+    contrastive term against the server anchor (Eq. 11);
+  * ``full_finetune=True`` gives the Multi-FedAvg baseline (all params,
+    uniform weights) — the paper's main comparison and the §Perf baseline.
+
+Also provides a runnable host-scale training loop (examples/train_edge_slm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import ccl as ccl_lib
+from repro.core import lora
+from repro.core.connector import connector_prefix
+from repro.core.gram import contrastive_loss
+from repro.models.layers import padded_vocab
+from repro.models.model import ModelBundle
+from repro.optim.adamw import Optimizer, adamw, apply_updates
+from repro.sharding.partition import constrain
+
+
+def per_example_ce(logits, tokens, loss_mask):
+    """(B,) per-example mean CE — needed for MMA per-example weighting."""
+    S = tokens.shape[1]
+    P_len = logits.shape[1] - S
+    pred = logits[:, P_len:P_len + S - 1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    m = loss_mask[:, 1:].astype(jnp.float32)
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+
+def per_example_ce_chunked(params, bundle: ModelBundle, hidden, tokens,
+                           loss_mask):
+    """(B,) per-example CE computed by scanning CE over SEQUENCE CHUNKS of
+    the final hidden states — the (B, S, V) f32 logits tensor (67 GB/device
+    for gemma-2b train_4k) is never materialized; the backward pass
+    recomputes each chunk's logits under ``jax.checkpoint``
+    (§Perf iteration 3)."""
+    from repro.models.layers import unembed as _unembed
+    cfg = bundle.cfg
+    B, S = tokens.shape
+    P_len = hidden.shape[1] - S
+    h = hidden[:, P_len:P_len + S - 1]                  # predicts tokens[1:]
+    tgt = tokens[:, 1:]
+    m = loss_mask[:, 1:].astype(jnp.float32)
+
+    c = min(cfg.loss_chunk, S - 1)
+    n = S - 1
+    nc = -(-n // c)
+    pad = nc * c - n
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    h = h.reshape(B, nc, c, -1).transpose(1, 0, 2, 3)   # (nc, B, c, d)
+    tgt = tgt.reshape(B, nc, c).transpose(1, 0, 2)
+    m = m.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, blk):
+        nll_sum, m_sum = carry
+        hb, tb, mb = blk
+        logits = _unembed(params["tok"], cfg, hb).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tb[..., None], axis=-1)[..., 0]
+        return (nll_sum + jnp.sum(nll * mb, axis=1),
+                m_sum + jnp.sum(mb, axis=1)), ()
+
+    (nll_sum, m_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32)),
+        (h, tgt, m))
+    return nll_sum / jnp.maximum(m_sum, 1.0)
+
+
+def mlecs_train_loss(params, bundle: ModelBundle, batch: Dict,
+                     ccl_weight: float = 0.5, n_negatives: int = 8,
+                     use_mma_weights: bool = True):
+    """Scalar loss for one SPMD step (global batch)."""
+    cfg = bundle.cfg
+    b = dict(batch)
+    mods = None
+    if cfg.n_modalities > 0 and "modality_feats" in b:
+        soft, mods, fused = connector_prefix(
+            params["connector"], cfg, b["modality_feats"], b["modality_mask"])
+        b["prefix_embeds"] = soft
+    if cfg.loss_impl == "chunked" and bundle.hidden is not None:
+        hid, aux = bundle.hidden(params, b)
+        ce_i = per_example_ce_chunked(params, bundle, hid, b["tokens"],
+                                      b["loss_mask"])
+    else:
+        logits, aux = bundle.logits(params, b)
+        ce_i = per_example_ce(logits, b["tokens"], b["loss_mask"])
+
+    if use_mma_weights and mods is not None:
+        # MMA (Eq. 13): examples from modality-richer clients weigh more.
+        w = jnp.sum(b["modality_mask"].astype(jnp.float32), axis=1)
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+        ce = jnp.sum(ce_i * w)
+    else:
+        ce = jnp.mean(ce_i)
+
+    loss = ce + bundle.cfg.router_aux_weight * aux
+    metrics = {"ce": ce, "aux": aux}
+    if mods is not None and ccl_weight > 0.0:
+        anchor = b.get("anchor")
+        anchor = fused if anchor is None else anchor
+        cl = contrastive_loss(anchor, mods, b["modality_mask"], n_negatives)
+        loss = loss + ccl_weight * cl
+        metrics["ccl"] = cl
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(bundle: ModelBundle, optimizer: Optimizer,
+                    full_finetune: bool = False, ccl_weight: float = 0.5,
+                    n_negatives: int = 8, use_mma_weights: bool = True
+                    ) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    NOT jit-wrapped — the caller jits with explicit in/out shardings (dry-run
+    and production) or plainly (host runs).
+    """
+    predicate = lora.all_trainable if full_finetune else lora.default_trainable
+
+    def step(params, opt_state, batch):
+        train = lora.partition(params, predicate)
+
+        def loss_fn(t):
+            full = lora.combine(params, t)
+            return mlecs_train_loss(full, bundle, batch, ccl_weight,
+                                    n_negatives, use_mma_weights)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(train)
+        updates, opt_state = optimizer.update(grads, opt_state, train)
+        train = apply_updates(train, updates)
+        params = lora.combine(params, train)
+        return params, opt_state, metrics
+
+    return step
+
+
+def init_train_state(bundle: ModelBundle, optimizer: Optimizer, key,
+                     full_finetune: bool = False):
+    params = ccl_lib.init_unified(key, bundle)
+    predicate = lora.all_trainable if full_finetune else lora.default_trainable
+    opt_state = optimizer.init(lora.partition(params, predicate))
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# host-scale runnable loop (examples/train_edge_slm.py drives this)
+
+def run_training(bundle: ModelBundle, data_iter, steps: int, lr: float = 1e-3,
+                 log_every: int = 20, seed: int = 0,
+                 full_finetune: bool = False, ccl_weight: float = 0.5,
+                 checkpoint_dir: Optional[str] = None):
+    opt = adamw(lr)
+    params, opt_state = init_train_state(
+        bundle, opt, jax.random.key(seed), full_finetune)
+    step_fn = jax.jit(make_train_step(bundle, opt, full_finetune, ccl_weight))
+    history = []
+    for i in range(steps):
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             next(data_iter))
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            print(f"step {i:5d}  " +
+                  "  ".join(f"{k}={v:.4f}" for k, v in m.items()))
+    if checkpoint_dir:
+        from repro.checkpointing import CheckpointManager
+        CheckpointManager(checkpoint_dir).save(steps, params)
+    return params, history

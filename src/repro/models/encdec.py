@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (B, T_frames, F); a
+learned projector maps them into d_model.  The transformer itself — encoder,
+decoder with cross-attention, KV-cached decode — is fully implemented.
+
+TPU adaptation note: Whisper's learned decoder positions cap the context at
+448; we use RoPE on decoder self-attention instead so the assigned decode
+shapes (32k / 500k-window) are reachable.  Encoder keeps sinusoidal positions.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+
+def sinusoid(T: int, d: int, dtype):
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def _init_enc_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), cfg.param_dtype),
+        "ln2": jnp.zeros((d,), cfg.param_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), cfg.param_dtype),
+        "ln_x": jnp.zeros((d,), cfg.param_dtype),
+        "ln2": jnp.zeros((d,), cfg.param_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "xattn": L.init_attention(ks[1], cfg, lora=False),
+        "mlp": L.init_mlp(ks[2], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    k_emb, k_enc, k_dec, k_fp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    k1, k2 = jax.random.split(k_fp)
+    return {
+        "tok": L.init_embedding(k_emb, cfg),
+        "frontend": {
+            "fp_w1": L._dense_init(k1, (cfg.frontend_dim, cfg.d_model),
+                                   cfg.param_dtype),
+            "fp_w2": L._dense_init(k2, (cfg.d_model, cfg.d_model),
+                                   cfg.param_dtype),
+        },
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+
+def encode(params, cfg: ModelConfig, frontend_embeds):
+    """frontend_embeds: (B, T, F) stubbed frames -> (B, T, d)."""
+    frontend_embeds = frontend_embeds.astype(cfg.param_dtype)
+    h = jax.nn.gelu(frontend_embeds @ params["frontend"]["fp_w1"])
+    x = h @ params["frontend"]["fp_w2"]
+    T = x.shape[1]
+    x = x + sinusoid(T, cfg.d_model, x.dtype)[None]
+    Bsz = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (Bsz, T))
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        out, _ = L.self_attention(lp["attn"], cfg, h, positions,
+                                  jnp.int32(L.BIG_WINDOW),
+                                  bidirectional=True, use_rope=False)
+        y = carry + out
+        h2 = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        return y + L.mlp(lp["mlp"], cfg, h2), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encode_cross_kv(params, cfg: ModelConfig, enc_x):
+    """Per-decoder-layer cross K/V: (L, B, T, K, hd) x2."""
+    def body(_, lp):
+        return None, L.encode_kv(lp["xattn"], cfg, enc_x)
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_layers"])
+    return ks, vs
+
+
+# ---------------------------------------------------------------------------
+# decoder
+
+def decode_forward(params, cfg: ModelConfig, tokens, enc_x,
+                   collect_kv: bool = False):
+    """Teacher-forced decoder over full token sequence."""
+    x = L.embed(params["tok"], cfg, tokens)
+    Bsz, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (Bsz, S))
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        out, kv = L.self_attention(lp["attn"], cfg, h, positions,
+                                   jnp.int32(cfg.sliding_window
+                                             or L.BIG_WINDOW))
+        y = carry + out
+        hx = L.rms_norm(y, lp["ln_x"], cfg.norm_eps)
+        ek, ev = L.encode_kv(lp["xattn"], cfg, enc_x)
+        y = y + L.cross_attention(lp["xattn"], cfg, hx, ek, ev)
+        h2 = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + L.mlp(lp["mlp"], cfg, h2)
+        return y, (kv if collect_kv else ())
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, kv = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["tok"], cfg, x), (kv if collect_kv else None)
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds,
+            collect_kv: bool = False):
+    enc_x = encode(params, cfg, frontend_embeds)
+    logits, kv = decode_forward(params, cfg, tokens, enc_x, collect_kv)
+    return logits, jnp.zeros((), jnp.float32), kv
+
+
+# ---------------------------------------------------------------------------
+# cache + decode step
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    Sc = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    K, hd, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    T = cfg.frontend_tokens
+    return {
+        "k": jnp.zeros((Lr, batch, Sc, K, hd), cfg.param_dtype),
+        "v": jnp.zeros((Lr, batch, Sc, K, hd), cfg.param_dtype),
+        "pos": jnp.full((Lr, Sc), -1, jnp.int32),
+        "cross_k": jnp.zeros((Lr, batch, T, K, hd), cfg.param_dtype),
+        "cross_v": jnp.zeros((Lr, batch, T, K, hd), cfg.param_dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, frontend_embeds):
+    enc_x = encode(params, cfg, frontend_embeds)
+    logits, kv = decode_forward(params, cfg, tokens, enc_x, collect_kv=True)
+    k_stack, v_stack = kv
+    S = k_stack.shape[2]
+    Sc = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    keep_from = S - Sc
+    kept_pos = jnp.arange(keep_from, S, dtype=jnp.int32)
+    slots = jnp.mod(kept_pos, Sc)
+    cache = {
+        "k": jnp.zeros_like(k_stack[:, :, :Sc]).at[:, :, slots].set(
+            k_stack[:, :, keep_from:]),
+        "v": jnp.zeros_like(v_stack[:, :, :Sc]).at[:, :, slots].set(
+            v_stack[:, :, keep_from:]),
+        "pos": jnp.full((cfg.n_layers, Sc), -1, jnp.int32).at[:, slots].set(
+            kept_pos[None, :]),
+    }
+    cache["cross_k"], cache["cross_v"] = encode_cross_kv(params, cfg, enc_x)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens, pos):
+    x = L.embed(params["tok"], cfg, tokens)
+    window = jnp.int32(cfg.sliding_window or L.BIG_WINDOW)
+
+    def body(carry, xs):
+        lp, ck, cv, cpos, xk, xv = xs
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        out, ck, cv, cpos = L.decode_attention(
+            lp["attn"], cfg, h, pos, ck, cv, cpos, window)
+        y = carry + out
+        hx = L.rms_norm(y, lp["ln_x"], cfg.norm_eps)
+        y = y + L.cross_attention(lp["xattn"], cfg, hx, xk, xv)
+        h2 = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + L.mlp(lp["mlp"], cfg, h2)
+        return y, (ck, cv, cpos)
+
+    x, ys = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                   cache["v"], cache["pos"],
+                                   cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache, k=ys[0], v=ys[1], pos=ys[2])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["tok"], cfg, x)[:, 0], new_cache

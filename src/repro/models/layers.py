@@ -1,0 +1,269 @@
+"""Shared neural layers: norms, RoPE, GQA attention (full / sliding-window /
+decode-with-cache), MLPs.  Functional style — params are plain dict pytrees.
+
+LoRA (the paper's AMT vehicle) is integrated at the projection level:
+``proj(p, name, x, cfg)`` applies ``x @ W`` plus, when ``{name}_lora_a/b``
+leaves are present, the low-rank update ``(alpha/r) * (x @ A) @ B`` (Eq. 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import constrain, constrain_kv_cache
+
+BIG_WINDOW = 1 << 30   # stands for "no window" in per-layer window arrays
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_lora(key, p: dict, name: str, in_dim: int, out_dim: int,
+              cfg: ModelConfig) -> None:
+    """Attach LoRA A/B leaves for target ``name`` to param dict ``p`` (Eq. 1)."""
+    ka, _ = jax.random.split(key)
+    r = cfg.lora_rank
+    p[f"{name}_lora_a"] = _dense_init(ka, (in_dim, r), cfg.param_dtype)
+    p[f"{name}_lora_b"] = jnp.zeros((r, out_dim), cfg.param_dtype)
+
+
+def proj(p: dict, name: str, x, cfg: ModelConfig):
+    """Linear projection with optional fused LoRA update."""
+    y = x @ p[name]
+    a = p.get(f"{name}_lora_a")
+    if a is not None:
+        b = p[f"{name}_lora_b"]
+        y = y + (cfg.lora_alpha / cfg.lora_rank) * ((x @ a) @ b)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated at ``positions`` (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+def init_attention(key, cfg: ModelConfig, lora: bool = True,
+                   cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": _dense_init(ks[0], (d, H * hd), cfg.param_dtype),
+        "wk": _dense_init(ks[1], (d, K * hd), cfg.param_dtype),
+        "wv": _dense_init(ks[2], (d, K * hd), cfg.param_dtype),
+        "wo": _dense_init(ks[3], (H * hd, d), cfg.param_dtype,
+                          scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+    if lora:
+        for i, t in enumerate(cfg.lora_targets):
+            if t in ("wq", "wo"):
+                dims = {"wq": (d, H * hd), "wo": (H * hd, d)}[t]
+            elif t in ("wk", "wv"):
+                dims = (d, K * hd)
+            else:
+                continue
+            init_lora(ks[4 + i % 4], p, t, dims[0], dims[1], cfg)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, xq, xkv, positions_q, positions_kv,
+         use_rope: bool = True):
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = proj(p, "wq", xq, cfg).reshape(*xq.shape[:-1], H, hd)
+    k = proj(p, "wk", xkv, cfg).reshape(*xkv.shape[:-1], K, hd)
+    v = proj(p, "wv", xkv, cfg).reshape(*xkv.shape[:-1], K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions_q, cfg.rope_theta)
+        k = rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def mha(q, k, v, mask=None):
+    """Grouped-query attention core.  q: (B,Sq,H,D)  k,v: (B,Sk,K,D).
+
+    ``mask``: broadcastable to (B, 1, Sq, Sk) (no per-head masks needed —
+    sliding windows are uniform within a layer); True = attend.
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(D)
+    if mask is not None:
+        m = mask[:, :, None]                      # (B,1,1,Sq,Sk)
+        logits = jnp.where(m, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H * D)
+
+
+def causal_window_mask(positions_q, positions_kv, window):
+    """True where q may attend to k.  ``window`` traced scalar (BIG_WINDOW =
+    full attention) — this keeps gemma3's 5-local:1-global pattern inside a
+    single homogeneous ``lax.scan`` over layers."""
+    dq = positions_q[..., :, None]
+    dk = positions_kv[..., None, :]
+    return (dk <= dq) & (dq - dk < window)
+
+
+def self_attention(p, cfg: ModelConfig, x, positions, window,
+                   bidirectional: bool = False, use_rope: bool = True):
+    """Full-sequence self-attention (train / prefill).  Returns (out, (k, v))."""
+    q, k, v = _qkv(p, cfg, x, x, positions, positions, use_rope)
+    if bidirectional:
+        mask = None
+    else:
+        mask = causal_window_mask(positions, positions, window)[:, None]
+    out = mha(q, k, v, mask)
+    return proj(p, "wo", out, cfg), (k, v)
+
+
+def decode_attention(p, cfg: ModelConfig, x, pos, cache_k, cache_v,
+                     cache_positions, window):
+    """One-token decode against a (possibly ring-buffered) KV cache.
+
+    x: (B, 1, d);  cache_k/v: (B, S_c, K, hd) already rope'd;
+    cache_positions: (S_c,) absolute position stored in each slot (-1 = empty).
+    Returns (out, new_k_slot, new_v_slot) — cache update happens in the caller
+    so this function stays functional over the scan carry.
+    """
+    posvec = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, x, posvec, posvec)
+    # write into ring slot
+    S_c = cache_k.shape[1]
+    slot = jnp.mod(pos, S_c)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    cache_positions = jax.lax.dynamic_update_slice_in_dim(
+        cache_positions, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    cache_k = constrain_kv_cache(cache_k)
+    cache_v = constrain_kv_cache(cache_v)
+    valid = (cache_positions >= 0) & (cache_positions <= pos) \
+        & (pos - cache_positions < window)
+    mask = valid[None, None, None, :]                       # (1,1,1,S_c)
+    out = mha(q, cache_k, cache_v, mask)
+    return proj(p, "wo", out, cfg), cache_k, cache_v, cache_positions
+
+
+def cross_attention(p, cfg: ModelConfig, x, enc_k, enc_v):
+    """Decoder cross-attention over precomputed encoder K/V (no mask, no rope)."""
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = proj(p, "wq", x, cfg).reshape(*x.shape[:-1], H, hd)
+    out = mha(q, enc_k, enc_v, mask=None)
+    return proj(p, "wo", out, cfg)
+
+
+def encode_kv(p, cfg: ModelConfig, enc_x):
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    k = proj(p, "wk", enc_x, cfg).reshape(*enc_x.shape[:-1], K, hd)
+    v = proj(p, "wv", enc_x, cfg).reshape(*enc_x.shape[:-1], K, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], (d, f), cfg.param_dtype),
+         "w_down": _dense_init(ks[1], (f, d), cfg.param_dtype)}
+    if cfg.activation in ("silu", "geglu"):
+        p["w_gate"] = _dense_init(ks[2], (d, f), cfg.param_dtype)
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x):
+    up = x @ p["w_up"]
+    if cfg.activation == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = constrain(h, "batch", "seq", "act_ff") if h.ndim == 3 else h
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+
+def init_embedding(key, cfg: ModelConfig) -> dict:
+    v = padded_vocab(cfg)
+    p = {"embed": _dense_init(key, (v, cfg.d_model), cfg.param_dtype,
+                              scale=1.0 / math.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, v), cfg.param_dtype)
+    return p
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to a multiple of 256 so it shards over 16-way model
+    parallelism (MaxText-style padding; logits over pad ids are masked)."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def embed(p, cfg: ModelConfig, tokens):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(p, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].T
+    else:
+        logits = x @ p["unembed"]
+    return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab") \
+        if logits.ndim == 3 else logits.astype(jnp.float32)

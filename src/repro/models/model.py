@@ -1,0 +1,141 @@
+"""Unified model factory: config -> ModelBundle.
+
+One API for all six families so the launcher, the federated loop, the smoke
+tests and the dry-run treat every assigned architecture identically:
+
+  bundle.init(key)                               -> params
+  bundle.logits(params, batch)                   -> (logits, aux)
+  bundle.lm_loss(params, batch)                  -> (loss, metrics)
+  bundle.prefill(params, batch)                  -> (last_logits, cache)
+  bundle.decode_step(params, cache, tokens, pos) -> (logits, cache)
+  bundle.init_cache(batch_size, seq_len)         -> cache pytree
+
+``batch`` is a dict with 'tokens' (B,S) and optionally 'loss_mask',
+'frontend_embeds' (audio/vlm stubs), 'prefix_embeds' (ML-ECS soft prompt).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, ssm, transformer
+from repro.models.layers import padded_vocab
+
+
+class ModelBundle(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    logits: Callable
+    lm_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    hidden: Optional[Callable] = None   # (params, batch) -> (B, P+S, d)
+                                        # final-norm states (chunked loss)
+
+
+def _prefix(params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """Assemble the embedding prefix: frontend (vision stub) + ML-ECS soft
+    prompt, if present."""
+    parts = []
+    if cfg.frontend and cfg.family != "encdec":
+        parts.append(transformer.frontend_prefix(
+            params, cfg, batch["frontend_embeds"]))
+    if "prefix_embeds" in batch and batch["prefix_embeds"] is not None:
+        parts.append(batch["prefix_embeds"])
+    if not parts:
+        return None
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def cross_entropy(logits, targets, mask, vocab_size: int):
+    """Token-level CE in f32; ignores vocab padding ids and masked positions."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+
+    if fam == "ssm":
+        mod_init, mod_forward = ssm.init_params, ssm.forward
+        mod_prefill, mod_decode, mod_cache = (ssm.prefill, ssm.decode_step,
+                                              ssm.init_cache)
+    elif fam == "encdec":
+        mod_init, mod_forward = encdec.init_params, encdec.forward
+        mod_prefill, mod_decode, mod_cache = (encdec.prefill,
+                                              encdec.decode_step,
+                                              encdec.init_cache)
+    else:  # dense / moe / vlm / hybrid
+        mod_init, mod_forward = transformer.init_params, transformer.forward
+        mod_prefill, mod_decode, mod_cache = (transformer.prefill,
+                                              transformer.decode_step,
+                                              transformer.init_cache)
+
+    def init(key):
+        return mod_init(key, cfg)
+
+    def logits_fn(params, batch):
+        if fam == "encdec":
+            out, aux, _ = mod_forward(params, cfg, batch["tokens"],
+                                      batch["frontend_embeds"])
+        else:
+            out, aux, _ = mod_forward(params, cfg, batch["tokens"],
+                                      prefix_embeds=_prefix(params, cfg, batch))
+        return out, aux
+
+    def lm_loss(params, batch):
+        logits, aux = logits_fn(params, batch)
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        P = logits.shape[1] - S               # prefix length
+        targets = tokens[:, 1:]
+        pred = logits[:, P:P + S - 1]
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(targets, jnp.float32) if mask is None \
+            else mask[:, 1:]
+        ce = cross_entropy(pred, targets, mask, padded_vocab(cfg))
+        loss = ce + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill_fn(params, batch):
+        if fam == "encdec":
+            return mod_prefill(params, cfg, batch["tokens"],
+                               batch["frontend_embeds"])
+        return mod_prefill(params, cfg, batch["tokens"],
+                           _prefix(params, cfg, batch))
+
+    def decode_fn(params, cache, tokens, pos):
+        return mod_decode(params, cfg, cache, tokens, pos)
+
+    def cache_fn(batch_size: int, seq_len: int):
+        return mod_cache(cfg, batch_size, seq_len)
+
+    hidden_fn = None
+    if fam != "encdec":
+        def hidden_fn(params, batch):
+            if fam == "ssm":
+                h, aux, _ = ssm.forward(params, cfg, batch["tokens"],
+                                        prefix_embeds=_prefix(params, cfg,
+                                                              batch),
+                                        return_hidden=True)
+            else:
+                h, aux, _ = transformer.forward(
+                    params, cfg, batch["tokens"],
+                    prefix_embeds=_prefix(params, cfg, batch),
+                    return_hidden=True)
+            return h, aux
+
+    return ModelBundle(cfg, init, logits_fn, lm_loss, prefill_fn,
+                       decode_fn, cache_fn, hidden_fn)
+
+
+def with_overrides(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, **kw)

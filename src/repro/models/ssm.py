@@ -1,0 +1,289 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD: the sequence is split into chunks of length L; within a chunk
+the output is a masked (decay-weighted) attention-like matmul that maps onto
+the MXU, across chunks a cheap recurrence over per-chunk states is carried by
+``lax.scan``.  Decode is the O(1) recurrent update on a per-head state
+(B, H, P, N).  A Pallas kernel for the intra-chunk term lives in
+``repro.kernels.ssd_scan`` and is validated against :func:`ssd_reference`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, init_lora, proj, rms_norm
+from repro.sharding.partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# params
+
+def init_ssm(key, cfg: ModelConfig, lora: bool = True) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    N, H, G = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    conv_dim = di + 2 * G * N
+    in_dim = 2 * di + 2 * G * N + H
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _dense_init(ks[0], (d, in_dim), cfg.param_dtype),
+        "conv_w": _dense_init(ks[1], (conv_dim, cfg.ssm_conv), cfg.param_dtype,
+                              scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "ssm_norm": jnp.zeros((di,), cfg.param_dtype),
+        "out_proj": _dense_init(ks[2], (di, d), cfg.param_dtype),
+    }
+    if lora and "in_proj" in cfg.lora_targets:
+        init_lora(ks[3], p, "in_proj", d, in_dim, cfg)
+    if lora and "out_proj" in cfg.lora_targets:
+        init_lora(ks[4], p, "out_proj", di, d, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+
+def causal_conv(x, w, b):
+    """x: (B, S, D) depthwise causal conv with kernel (D, W)."""
+    W = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(W))
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+
+def ssd_reference(x, dt, A, B_, C_, chunk: int, return_state: bool = False):
+    """Pure-jnp chunked SSD oracle.
+
+    x: (B,S,H,P)  dt: (B,S,H)  A: (H,) negative  B_,C_: (B,S,G,N)
+    Returns y: (B,S,H,P) and, when ``return_state``, the final recurrent
+    state (B,H,P,N) so prefill can hand off to recurrent decode.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    S_orig = S
+    if S % chunk:                      # pad (e.g. soft-prompt prefix makes
+        pad = chunk - S % chunk        # S = 4096+8); dt=0 rows are inert
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    L = chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, L, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(f32)
+    Bc = jnp.repeat(B_.reshape(Bsz, nc, L, G, N), rep, axis=3).astype(f32)
+    Cc = jnp.repeat(C_.reshape(Bsz, nc, L, G, N), rep, axis=3).astype(f32)
+
+    da = dtc * A                                      # (B,nc,L,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                      # within-chunk cumulative
+
+    # ---- intra-chunk (the attention-dual term) ----
+    # decay(i, j) = exp(cum_i - cum_j) for j <= i.
+    # Double-where: non-causal diff is POSITIVE-large (up to |A|*dt*L ~ 350)
+    # and exp() of it is inf — masking the VALUE still leaves a 0*inf = NaN
+    # in the backward pass, so the argument must be masked too.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,L,L,H)
+    ii = jnp.arange(L)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    diff = jnp.where(causal, diff, 0.0)
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc)             # (B,nc,L,L,H)
+    att = cb * decay * dtc[:, :, None, :, :]                  # dt_j on source
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", att, xc)
+
+    # ---- chunk states ----
+    total = cum[:, :, -1, :]                                  # (B,nc,H)
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)        # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                        decay_to_end * dtc, Bc, xc)           # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ----
+    def step(h, inp):
+        st, tot = inp                                         # (B,H,P,N),(B,H)
+        h_new = jnp.exp(tot)[:, :, None, None] * h + st
+        return h_new, h                                       # emit h_prev
+    h0 = jnp.zeros((Bsz, H, P, N), f32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   total.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp",
+                         Cc * jnp.exp(cum)[..., None], h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_orig].astype(x.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def ssm_block(p, cfg: ModelConfig, x, return_state: bool = False):
+    """Full-sequence SSD block.  x: (B,S,d) -> (B,S,d) [, final state]."""
+    di, N, H, G, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_groups, cfg.ssm_head_dim)
+    Bsz, S, _ = x.shape
+    zxbcdt = proj(p, "in_proj", x, cfg)
+    zxbcdt = constrain(zxbcdt, "batch", "seq", "act_ssm")
+    z = zxbcdt[..., :di]
+    xBC_raw = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., -H:].astype(jnp.float32)
+
+    xBC = jax.nn.silu(causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(Bsz, S, H, P)
+    B_ = xBC[..., di:di + G * N].reshape(Bsz, S, G, N)
+    C_ = xBC[..., di + G * N:].reshape(Bsz, S, G, N)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    res = ssd_reference(xs, dt, A, B_, C_, cfg.ssm_chunk,
+                        return_state=return_state)
+    y, h_last = res if return_state else (res, None)
+    y = y + p["D_skip"][:, None].astype(y.dtype) * xs
+    y = y.reshape(Bsz, S, di)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["ssm_norm"], cfg.norm_eps)
+    out = proj(p, "out_proj", y, cfg)
+    if return_state:
+        state = {"h": h_last,
+                 "conv": xBC_raw[:, -(cfg.ssm_conv - 1):, :]}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent, O(1) per token)
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim),
+                          cfg.param_dtype),
+    }
+
+
+def ssm_decode_step(p, cfg: ModelConfig, state: dict, x):
+    """x: (B, 1, d) -> (y (B,1,d), new_state)."""
+    di, N, H, G, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_groups, cfg.ssm_head_dim)
+    Bsz = x.shape[0]
+    zxbcdt = proj(p, "in_proj", x[:, 0], cfg)                  # (B, in_dim)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., -H:].astype(jnp.float32)
+
+    # conv over the rolling window [conv_state, x_t]
+    window = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)
+    W = cfg.ssm_conv
+    xBC = jnp.einsum("bwd,dw->bd", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)
+    new_conv = window[:, 1:]
+
+    xs = xBC[..., :di].reshape(Bsz, H, P)
+    B_ = jnp.repeat(xBC[..., di:di + G * N].reshape(Bsz, G, N), H // G, axis=1)
+    C_ = jnp.repeat(xBC[..., di + G * N:].reshape(Bsz, G, N), H // G, axis=1)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    h = state["h"] * decay[:, :, None, None] \
+        + (dt[:, :, None] * xs).astype(jnp.float32)[..., None] \
+        * B_.astype(jnp.float32)[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, C_.astype(jnp.float32))
+    y = y.astype(x.dtype) + p["D_skip"].astype(x.dtype)[:, None] * xs
+    y = y.reshape(Bsz, di) * jax.nn.silu(z)
+    y = rms_norm(y, p["ssm_norm"], cfg.norm_eps)
+    y = proj(p, "out_proj", y, cfg)
+    return y[:, None, :], {"h": h, "conv": new_conv}
+
+
+# ===========================================================================
+# full Mamba2 model (attention-free stack)
+
+from repro.models import layers as _L  # noqa: E402  (late import, no cycle)
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "ssm": init_ssm(key, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    k_emb, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "tok": _L.init_embedding(k_emb, cfg),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(layer_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            collect_state: bool = False, return_hidden: bool = False):
+    x = _L.embed(params["tok"], cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", "seq", None)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        if collect_state:
+            out, st = ssm_block(lp["ssm"], cfg, h, return_state=True)
+            return carry + out, (st["h"], st["conv"])
+        return carry + ssm_block(lp["ssm"], cfg, h), ()
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and not collect_state) \
+        else body
+    x, ys = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    out = x if return_hidden else _L.unembed(params["tok"], cfg, x)
+    return (out, aux, ys) if collect_state else (out, aux, None)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    st = init_ssm_state(cfg, batch)
+    Lr = cfg.n_layers
+    return {
+        "ssm_h": jnp.zeros((Lr, *st["h"].shape), jnp.float32),
+        "ssm_conv": jnp.zeros((Lr, *st["conv"].shape), cfg.param_dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    logits, _, states = forward(params, cfg, tokens, prefix_embeds,
+                                collect_state=True)
+    return logits[:, -1], {"ssm_h": states[0], "ssm_conv": states[1]}
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens, pos):
+    x = _L.embed(params["tok"], cfg, tokens)
+
+    def body(carry, xs):
+        lp, sh, sconv = xs
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        out, st = ssm_decode_step(lp["ssm"], cfg,
+                                  {"h": sh, "conv": sconv}, h)
+        return carry + out, (st["h"], st["conv"])
+
+    x, ys = jax.lax.scan(body, x,
+                         (params["layers"], cache["ssm_h"],
+                          cache["ssm_conv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _L.unembed(params["tok"], cfg, x)
+    return logits[:, 0], {"ssm_h": ys[0], "ssm_conv": ys[1]}

@@ -1,0 +1,366 @@
+"""Decoder-only transformer trunk covering the dense / moe / vlm / hybrid
+families.  Layers are homogeneous and scanned (``lax.scan`` over stacked
+params) so the HLO stays one-layer-sized for every depth — essential for
+compile time at 512 devices.
+
+The gemma3 5-local:1-global attention pattern and hymba's sliding windows are
+expressed as a *per-layer window array* fed through the scan, keeping the
+scan homogeneous (see ``layers.causal_window_mask``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.banded import banded_mha
+from repro.sharding.partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "ln1": jnp.zeros((d,), cfg.param_dtype),
+        "ln2": jnp.zeros((d,), cfg.param_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+    }
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg)
+    if cfg.is_moe:
+        p["moe"] = moe_lib.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    k_emb, k_layers, k_front = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "tok": L.init_embedding(k_emb, cfg),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.frontend:            # vision/audio stub projector (the one carve-out)
+        k1, k2 = jax.random.split(k_front)
+        params["frontend"] = {
+            "fp_w1": L._dense_init(k1, (cfg.frontend_dim, cfg.d_model),
+                                   cfg.param_dtype),
+            "fp_w2": L._dense_init(k2, (cfg.d_model, cfg.d_model),
+                                   cfg.param_dtype),
+        }
+    return params
+
+
+def window_array(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.array(
+        [cfg.window_for_layer(l) or L.BIG_WINDOW for l in range(cfg.n_layers)],
+        dtype=jnp.int32)
+
+
+def frontend_prefix(params, cfg: ModelConfig, frontend_embeds):
+    """Project stubbed modality-frontend embeddings into the LM space."""
+    frontend_embeds = frontend_embeds.astype(cfg.param_dtype)
+    h = jax.nn.gelu(frontend_embeds @ params["frontend"]["fp_w1"])
+    return h @ params["frontend"]["fp_w2"]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+#
+# Windows are STATIC per layer so sliding-window layers can take the banded
+# attention path (S x 2w logits instead of S x S — §Perf iteration 2).
+# Mixed local:global patterns (gemma3 5:1, hymba) are handled by scanning
+# over *periodic groups* of cfg.global_every layers with the group body
+# unrolled — the scan stays homogeneous, the window stays static.
+
+def _block(lp, cfg: ModelConfig, x, positions, window, collect: bool):
+    """window: None = full causal; python int = STATIC sliding window
+    (banded path eligible); traced scalar = dynamic masked path."""
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    S = x.shape[1]
+    if (isinstance(window, int) and cfg.attn_impl == "banded"
+            and S > 2 * window):
+        q, k, v = L._qkv(lp["attn"], cfg, h, h, positions, positions)
+        attn_out = L.proj(lp["attn"], "wo",
+                          banded_mha(q, k, v, window), cfg)
+        kv = (k, v)
+    else:
+        if window is None:
+            eff = jnp.int32(L.BIG_WINDOW)
+        elif isinstance(window, int):
+            eff = jnp.int32(window)
+        else:
+            eff = window          # traced per-layer scalar from the scan
+        attn_out, kv = L.self_attention(lp["attn"], cfg, h, positions, eff)
+    state = ()
+    if cfg.family == "hybrid":
+        if collect:
+            ssm_out, st = ssm_lib.ssm_block(lp["ssm"], cfg, h,
+                                            return_state=True)
+            state = (st["h"], st["conv"])
+        else:
+            ssm_out = ssm_lib.ssm_block(lp["ssm"], cfg, h)
+        attn_out = 0.5 * (attn_out + ssm_out)
+    x = x + attn_out
+    x = constrain(x, "batch", "seq", None)
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        moe_fn = (moe_lib.moe_mlp_sharded if cfg.moe_impl == "sharded"
+                  else moe_lib.moe_mlp)
+        y, aux = moe_fn(lp["moe"], cfg, h2)
+    else:
+        y, aux = L.mlp(lp["mlp"], cfg, h2), jnp.zeros((), jnp.float32)
+    x = x + y
+    return x, aux, (kv if collect else None), (state if collect else ())
+
+
+def _forward_scan(params, cfg: ModelConfig, x, positions, collect_kv: bool,
+                  return_hidden: bool = False):
+    """Baseline path: one homogeneous scan, per-layer window as traced
+    scalar (masked S x S attention)."""
+    def body(carry, xs):
+        lp, w = xs
+        y, aux, kv, st = _block(lp, cfg, carry, positions, w, collect_kv)
+        return y, ((aux, kv, st) if collect_kv else (aux,))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, ys = jax.lax.scan(body_fn, x, (params["layers"], window_array(cfg)))
+    aux = jnp.sum(ys[0])
+    kv_stack = None
+    if collect_kv:
+        kv_stack = ys[1]
+        if cfg.family == "hybrid":
+            kv_stack = kv_stack + ys[2]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux, kv_stack
+    logits = L.unembed(params["tok"], cfg, x)
+    return logits, aux, kv_stack
+
+
+def _layer_plan(cfg: ModelConfig):
+    """(group_size, n_groups, n_remainder, window-per-group-position)."""
+    if cfg.sliding_window == 0:
+        return 1, cfg.n_layers, 0, [None]
+    if cfg.global_every == 0:
+        return 1, cfg.n_layers, 0, [cfg.sliding_window]
+    g = cfg.global_every
+    pattern = [cfg.window_for_layer(i) or None for i in range(g)]
+    return g, cfg.n_layers // g, cfg.n_layers % g, pattern
+
+
+def _slice_layers(layers, start, stop):
+    return jax.tree.map(lambda a: a[start:stop], layers)
+
+
+def forward(params, cfg: ModelConfig, tokens,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            collect_kv: bool = False, return_hidden: bool = False):
+    """tokens: (B, S) int32; prefix_embeds: (B, P, d) soft/frontend prefix.
+
+    Returns (logits (B, P+S, V), aux_loss, kv_stack|None) —
+    for hybrid models with collect_kv, kv_stack = (k, v, ssm_h, ssm_conv).
+    With ``return_hidden``, the first element is the final-norm hidden
+    states (B, P+S, d) instead of logits (chunked-loss path).
+    """
+    x = L.embed(params["tok"], cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    Bsz, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (Bsz, S))
+    x = constrain(x, "batch", "seq", None)
+
+    if cfg.attn_impl != "banded" or cfg.sliding_window == 0:
+        return _forward_scan(params, cfg, x, positions, collect_kv,
+                             return_hidden)
+
+    g, ng, rem, pattern = _layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    collected = []
+
+    def group_body(carry, lp_group):
+        y = carry
+        auxs, kvs, states = [], [], []
+        for i in range(g):
+            lp = jax.tree.map(lambda a: a[i], lp_group) if g > 1 else lp_group
+            y, aux, kv, st = _block(lp, cfg, y, positions, pattern[i],
+                                    collect_kv)
+            auxs.append(aux)
+            if collect_kv:
+                kvs.append(kv)
+                states.append(st)
+        ys = (sum(auxs),)
+        if collect_kv:
+            stk = (lambda *a: jnp.stack(a)) if g > 1 else (lambda *a: a[0])
+            ys += (jax.tree.map(stk, *kvs),)
+            if cfg.family == "hybrid":
+                ys += (jax.tree.map(stk, *states),)
+        return y, ys
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+    n_scanned = ng * g
+    grouped = jax.tree.map(
+        lambda a: a[:n_scanned].reshape(ng, g, *a.shape[1:]) if g > 1
+        else a[:n_scanned], params["layers"])
+    x, ys = jax.lax.scan(body_fn, x, grouped)
+    aux_total += jnp.sum(ys[0])
+    if collect_kv:
+        # (ng, g, B, ...) -> (L_scanned, B, ...)
+        flat = jax.tree.map(
+            lambda a: a.reshape(ng * g, *a.shape[2:]) if g > 1 else a, ys[1])
+        collected.append(flat)
+        if cfg.family == "hybrid":
+            collected.append(jax.tree.map(
+                lambda a: a.reshape(ng * g, *a.shape[2:]) if g > 1 else a,
+                ys[2]))
+
+    # remainder layers (e.g. gemma3: 26 = 4*6 + 2) — unrolled
+    rem_kvs, rem_states = [], []
+    for i in range(rem):
+        li = n_scanned + i
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        x, aux, kv, st = _block(lp, cfg, x, positions,
+                                cfg.window_for_layer(li) or None, collect_kv)
+        aux_total += aux
+        if collect_kv:
+            rem_kvs.append(kv)
+            rem_states.append(st)
+
+    kv_stack = None
+    if collect_kv:
+        kv_stack = collected[0]
+        if rem_kvs:
+            rem_stacked = jax.tree.map(lambda *a: jnp.stack(a), *rem_kvs)
+            kv_stack = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                kv_stack, rem_stacked)
+        if cfg.family == "hybrid":
+            st_stack = collected[1]
+            if rem_states:
+                rem_st = jax.tree.map(lambda *a: jnp.stack(a), *rem_states)
+                st_stack = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0),
+                    st_stack, rem_st)
+            kv_stack = kv_stack + st_stack
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total, kv_stack
+    logits = L.unembed(params["tok"], cfg, x)
+    return logits, aux_total, kv_stack
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Uniform per-layer cache capacity.  Pure sliding-window models ring-
+    buffer to the window; any global layer (gemma3/hymba pattern or full
+    attention) forces full-length caches."""
+    if cfg.sliding_window > 0 and cfg.global_every == 0:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    Sc = cache_len(cfg, seq_len)
+    K, hd, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    cache = {
+        "k": jnp.zeros((Lr, batch, Sc, K, hd), cfg.param_dtype),
+        "v": jnp.zeros((Lr, batch, Sc, K, hd), cfg.param_dtype),
+        "pos": jnp.full((Lr, Sc), -1, jnp.int32),
+    }
+    if cfg.family == "hybrid":
+        st = ssm_lib.init_ssm_state(cfg, batch)
+        cache["ssm_h"] = jnp.broadcast_to(
+            st["h"][None], (Lr, *st["h"].shape)) * 0.0
+        cache["ssm_conv"] = jnp.zeros((Lr, *st["conv"].shape),
+                                      cfg.param_dtype)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens, pos):
+    """One-token decode.  tokens: (B,1) int32, pos: scalar int32 (absolute).
+
+    Returns (logits (B, V), new_cache).
+    """
+    x = L.embed(params["tok"], cfg, tokens)
+    x = constrain(x, "batch", "seq", None)
+    windows = window_array(cfg)
+    hybrid = cfg.family == "hybrid"
+
+    def body(carry, xs):
+        if hybrid:
+            lp, ck, cv, cpos, w, sh, sconv = xs
+        else:
+            lp, ck, cv, cpos, w = xs
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, ck, cv, cpos = L.decode_attention(
+            lp["attn"], cfg, h, pos, ck, cv, cpos, w)
+        new_state = ()
+        if hybrid:
+            ssm_out, new_state = ssm_lib.ssm_decode_step(
+                lp["ssm"], cfg, {"h": sh, "conv": sconv}, h)
+            attn_out = 0.5 * (attn_out + ssm_out)
+        y = carry + attn_out
+        h2 = L.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            moe_fn = (moe_lib.moe_mlp_sharded if cfg.moe_impl == "sharded"
+                      else moe_lib.moe_mlp)
+            m, _ = moe_fn(lp["moe"], cfg, h2)
+        else:
+            m = L.mlp(lp["mlp"], cfg, h2)
+        y = y + m
+        if hybrid:
+            return y, (ck, cv, cpos, new_state["h"], new_state["conv"])
+        return y, (ck, cv, cpos)
+
+    xs = (params["layers"], cache["k"], cache["v"], cache["pos"], windows)
+    if hybrid:
+        xs = xs + (cache["ssm_h"], cache["ssm_conv"])
+    x, ys = jax.lax.scan(body, x, xs)
+    new_cache = {"k": ys[0], "v": ys[1], "pos": ys[2]}
+    if hybrid:
+        new_cache["ssm_h"], new_cache["ssm_conv"] = ys[3], ys[4]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], cfg, x)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full forward that also materializes the decode cache
+
+def prefill(params, cfg: ModelConfig, tokens,
+            prefix_embeds: Optional[jnp.ndarray] = None):
+    """Returns (last-token logits (B,V), cache ready for decode at pos=S)."""
+    logits, _, kv = forward(params, cfg, tokens, prefix_embeds,
+                            collect_kv=True)
+    k_stack, v_stack = kv[0], kv[1]             # (L, B, S, K, hd)
+    S = k_stack.shape[2]
+    Sc = cache_len(cfg, S)
+    # ring semantics: only the last Sc positions survive; their slots
+    # (pos % Sc) are unique, so a single scatter fills the cache.
+    keep_from = S - Sc
+    kept_pos = jnp.arange(keep_from, S, dtype=jnp.int32)
+    slots = jnp.mod(kept_pos, Sc)
+    cache_k = jnp.zeros_like(k_stack[:, :, :Sc]).at[:, :, slots].set(
+        k_stack[:, :, keep_from:])
+    cache_v = jnp.zeros_like(v_stack[:, :, :Sc]).at[:, :, slots].set(
+        v_stack[:, :, keep_from:])
+    pos_arr = jnp.full((cfg.n_layers, Sc), -1, jnp.int32)
+    pos_arr = pos_arr.at[:, slots].set(kept_pos[None, :])
+    cache = {"k": cache_k, "v": cache_v, "pos": pos_arr}
+    if cfg.family == "hybrid":
+        # SSM states were collected in the same forward pass (kv[2:])
+        cache["ssm_h"], cache["ssm_conv"] = kv[2], kv[3]
+    return logits[:, -1], cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import Optimizer, adamw, sgd
+from repro.optim.schedule import constant, cosine_warmup

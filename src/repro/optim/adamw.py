@@ -1,0 +1,102 @@
+"""Minimal-but-production AdamW (decoupled weight decay, bias correction,
+global-norm clipping) over arbitrary pytrees.  Implemented from scratch —
+the container has no optax and the framework owns its substrate.
+
+Master moments are kept in f32 regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable     # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state["nu"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        del gnorm  # available for metrics plumbing if needed
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype),
+                                   mu, params)
+            return updates, {"step": step, "mu": mu}
+        updates = jax.tree.map(
+            lambda g, p: (-lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            grads, params)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

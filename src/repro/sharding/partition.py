@@ -1,0 +1,221 @@
+"""Sharding helpers: activation constraints + parameter PartitionSpec trees.
+
+Model code calls ``constrain(x, "batch", "seq", "embed")`` with *logical* axis
+names.  Inside a ``sharding_context(mesh, rules)`` the constraint is applied
+with the physical mesh; outside any context it is a no-op, so the same model
+code runs on a single CPU device (smoke tests) and on the 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import Rules
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Rules):
+    prev = getattr(_ctx, "value", None)
+    _ctx.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.value = prev
+
+
+def current_context():
+    return getattr(_ctx, "value", None)
+
+
+def _sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop duplicate mesh axes and axes that don't divide the dim —
+    constraints are hints; an invalid hint must degrade, not crash."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        axes = entry if isinstance(entry, tuple) else (
+            (entry,) if entry is not None else ())
+        kept = []
+        prod = 1
+        for a in axes:
+            if a in used or a not in sizes:
+                continue
+            if dim % (prod * sizes[a]) != 0:
+                continue
+            kept.append(a)
+            prod *= sizes[a]
+            used.add(a)
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def constrain(x, *logical: Optional[str]):
+    """Apply a logical sharding constraint if a context is active."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical axes {logical}")
+    spec = _sanitize_spec(rules.spec(*logical), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def kv_cache_axes(B: int, Sc: int, K: int, sizes: dict, multi_pod: bool):
+    """Shared sharding policy for decode KV caches (B, Sc, K, hd):
+    batch over data(+pod) when divisible; else sequence-parallel KV over
+    data (and model too when kv heads are unshardable).  Used both for the
+    cache input specs and the in-model constraint so they agree."""
+    dsz, msz = sizes.get("data", 1), sizes.get("model", 1)
+    psz = sizes.get("pod", 1) if multi_pod else 1
+
+    def div(n, s):
+        return s > 1 and n % s == 0 and n >= s
+
+    if div(B, dsz * psz):
+        b_ax = ("pod", "data") if multi_pod else ("data",)
+    elif div(B, dsz):
+        b_ax = ("data",)
+    else:
+        b_ax = None
+    used_data = b_ax is not None
+    k_ax = "model" if div(K, msz) else None
+    s_ax = None
+    if not used_data and div(Sc, dsz):
+        s_ax = ("data",)
+        if k_ax is None and div(Sc, dsz * msz):
+            s_ax = ("data", "model")
+    elif k_ax is None and div(Sc, msz):
+        s_ax = ("model",)
+    return b_ax, (tuple(s_ax) if s_ax else None), k_ax
+
+
+def constrain_kv_cache(x):
+    """x: (B, Sc, K, hd) — apply the shared KV-cache sharding policy."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    multi_pod = "pod" in sizes
+    B, Sc, K, _ = x.shape
+    b_ax, s_ax, k_ax = kv_cache_axes(B, Sc, K, sizes, multi_pod)
+    spec = P(b_ax, s_ax, k_ax, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning by leaf path
+
+# leaf-name -> logical axes of the *unstacked* (single-layer) parameter.
+# A leading scan-stack (layer) dimension is detected by rank and padded with
+# None.  Names are matched on the last path component.
+_LEAF_LOGICAL = {
+    # embeddings
+    "embed": ("vocab", "embed"),
+    "unembed": ("embed", "vocab"),
+    "pos_embed": ("seq", "embed"),
+    # attention
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+    "q_norm": ("replicated",),
+    "k_norm": ("replicated",),
+    # dense mlp
+    "w_gate": ("embed", "ff"),
+    "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    # moe — experts on "model", d_model FSDP-sharded on "data" (the ff dim
+    # stays local so the grouped matmul needs no weight reduce)
+    "router": ("embed", "replicated"),
+    "we_gate": ("experts", "embed_fsdp", "replicated"),
+    "we_up": ("experts", "embed_fsdp", "replicated"),
+    "we_down": ("experts", "replicated", "embed_fsdp"),
+    # ssm
+    "in_proj": ("embed", "ssm_inner"),
+    "out_proj": ("ssm_inner", "embed"),
+    "conv_w": ("ssm_inner", "replicated"),
+    "conv_b": ("ssm_inner",),
+    "A_log": ("replicated",),
+    "dt_bias": ("replicated",),
+    "ssm_norm": ("ssm_inner",),
+    # norms / scalars
+    "scale": ("replicated",),
+    "bias": ("replicated",),
+}
+
+# LoRA adapters: A has the target's input dim, B the target's output dim.
+_LORA_A_LOGICAL = {
+    "wq": ("embed", "replicated"), "wk": ("embed", "replicated"),
+    "wv": ("embed", "replicated"), "wo": ("heads", "replicated"),
+    "in_proj": ("embed", "replicated"), "out_proj": ("ssm_inner", "replicated"),
+}
+_LORA_B_LOGICAL = {
+    "wq": ("replicated", "heads"), "wk": ("replicated", "kv_heads"),
+    "wv": ("replicated", "kv_heads"), "wo": ("replicated", "embed"),
+    "in_proj": ("replicated", "ssm_inner"), "out_proj": ("replicated", "embed"),
+}
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def logical_axes_for(path, leaf) -> tuple:
+    names = _path_names(path)
+    # flat trainable dicts use '/'-joined path strings as keys
+    last = names[-1].split("/")[-1]
+    m = re.match(r"^(.*)_lora_([ab])$", last)
+    if m:
+        target, which = m.group(1), m.group(2)
+        table = _LORA_A_LOGICAL if which == "a" else _LORA_B_LOGICAL
+        axes = table.get(target, ("replicated", "replicated"))
+    elif last in _LEAF_LOGICAL:
+        axes = _LEAF_LOGICAL[last]
+    else:
+        # connector / frontend / heads of the ML-ECS connector: replicate
+        axes = tuple("replicated" for _ in range(leaf.ndim))
+    # pad a leading layer-stack dim (scan) with None
+    if leaf.ndim == len(axes) + 1:
+        axes = (None,) + tuple(axes)
+    elif leaf.ndim != len(axes):
+        axes = tuple("replicated" for _ in range(leaf.ndim))
+    return axes
+
+
+def param_pspecs(params, rules: Rules, mesh: Optional[Mesh] = None):
+    """PartitionSpec tree for a parameter pytree (by leaf path).
+
+    With ``mesh`` given, specs are sanitized against leaf shapes — axes that
+    don't divide the dim degrade to replication (e.g. hymba's fused SSM
+    in_proj width 6514 is not 16-divisible; it replicates, which DESIGN.md
+    flags as a known sharding-granularity cost of fused projections)."""
+    def f(path, leaf):
+        axes = logical_axes_for(path, leaf)
+        spec = rules.spec(*[a for a in axes])
+        if mesh is not None:
+            spec = _sanitize_spec(spec, leaf.shape, mesh)
+        return spec
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def tree_shardings(pspec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,75 @@
+"""Logical-axis -> mesh-axis rules.
+
+Model code annotates tensors with *logical* axis names; the rules map those to
+physical mesh axes.  A single production mesh is either ("data","model") for a
+16x16 single pod or ("pod","data","model") for the 2x16x16 two-pod mesh; the
+"pod" axis joins "data" for batch parallelism so the same rules serve both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    name: str
+    mapping: dict
+
+    def axis(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        return self.mapping.get(logical)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.axis(a) for a in logical])
+
+
+def _base(batch_axes: Axis, kv_seq: Axis = None) -> dict:
+    return {
+        # activations
+        "batch": batch_axes,
+        "seq": None,
+        "kv_seq": kv_seq,        # decode: KV cache sequence dim
+        "embed": None,
+        "act_heads": "model",    # activation head dim (flattened h*hd)
+        "act_ff": "model",
+        "act_experts": "model",
+        "act_ssm": "model",
+        # banded attention: query/key blocks are embarrassingly parallel —
+        # shard them over "model" (the head counts of e.g. hymba (25/5)
+        # don't divide 16, so heads can't use that axis anyway)
+        "seq_block": "model",
+        # weights
+        "vocab": "model",
+        "heads": "model",        # flattened (n_heads*head_dim) weight dim
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        # FSDP axis for expert weights: MoE weight volume (235B-class) only
+        # fits per-chip when sharded over BOTH experts (model) and d_model
+        # (data); GSPMD all-gathers the d_model shards per layer (FSDP).
+        "embed_fsdp": "data",
+        "replicated": None,
+    }
+
+
+def rules_for(kind: str, multi_pod: bool) -> Rules:
+    batch: Axis = ("pod", "data") if multi_pod else ("data",)
+    if kind == "train" or kind == "prefill":
+        return Rules(f"{kind}{'_mp' if multi_pod else ''}", _base(batch))
+    if kind == "decode":
+        # decode: shard the KV cache along its sequence dim over "data"
+        # (sequence parallelism); batch additionally over "pod" when present.
+        return Rules(f"decode{'_mp' if multi_pod else ''}",
+                     _base(batch, kv_seq="data"))
+    raise ValueError(kind)
+
+
+TRAIN_RULES = rules_for("train", multi_pod=False)
+DECODE_RULES = rules_for("decode", multi_pod=False)

@@ -1,0 +1,30 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets 512 itself,
+# in its own process) — keep any user XLA_FLAGS out of the test env.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def toy_cfg():
+    return ModelConfig(
+        name="toy", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+        n_modalities=3, modality_dim=32, n_soft_tokens=4, connector_dim=48,
+        lora_rank=4, remat=False, activation="gelu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def tree_finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))

@@ -1,0 +1,67 @@
+"""Unit tests for the dry-run HLO collective parser (the roofline's
+collective term) — synthetic HLO text, no 512-device init needed."""
+import importlib
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def dparse():
+    # import the module WITHOUT letting it set XLA_FLAGS for this process
+    import os
+    saved = os.environ.get("XLA_FLAGS")
+    mod = importlib.import_module("repro.launch.dryrun")
+    if saved is None:
+        os.environ.pop("XLA_FLAGS", None)
+    else:
+        os.environ["XLA_FLAGS"] = saved
+    return mod
+
+
+HLO = """
+ENTRY %main (p0: bf16[128,512]) -> bf16[2048,512] {
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[128,512] %p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[64,64]{1,0} all-reduce(f32[64,64] %x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  ROOT %t = bf16[2048,512] tuple()
+}
+
+%body.1 (arg: f32[8]) -> f32[8] {
+  %ar2 = f32[1024]{0} all-reduce(f32[1024] %y), replica_groups=[1,16]<=[16], to_apply=%sum
+}
+"""
+
+
+def test_shape_bytes(dparse):
+    assert dparse._shape_bytes("bf16[128,512]") == 128 * 512 * 2
+    assert dparse._shape_bytes("f32[64,64]{1,0}") == 64 * 64 * 4
+    assert dparse._shape_bytes("(bf16[4,4], f32[2])") == 32 + 8
+
+
+def test_collective_bytes_ring_formulas_and_trips(dparse):
+    res = dparse.collective_bytes(HLO, scan_trips=10)
+    ag = res["per_op"]["all-gather"]
+    # 2048*512*2 bytes * (16-1)/16, outside any body -> x1
+    assert ag["bytes"] == pytest.approx(2048 * 512 * 2 * 15 / 16)
+    ar = res["per_op"]["all-reduce"]
+    # entry AR: 2*64*64*4*(4-1)/4 ; body AR: 2*1024*4*(16-1)/16 * 10 trips
+    expect = 2 * 64 * 64 * 4 * 3 / 4 + 10 * (2 * 1024 * 4 * 15 / 16)
+    assert ar["bytes"] == pytest.approx(expect)
+    assert res["total_bytes"] == pytest.approx(ag["bytes"] + ar["bytes"])
+
+
+def test_group_size_one_is_skipped(dparse):
+    txt = ("%ag = bf16[8,8] all-gather(bf16[8,8] %p), "
+           "replica_groups=[256,1]<=[256]\n")
+    res = dparse.collective_bytes(txt)
+    assert res["total_bytes"] == 0.0
+
+
+def test_model_flops_kinds(dparse):
+    from repro.configs.base import INPUT_SHAPES, get_config
+    cfg = get_config("qwen3-1.7b")
+    n = cfg.n_active_params()
+    tr = dparse.model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = dparse.model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr == pytest.approx(6.0 * n * 256 * 4096)
+    assert de == pytest.approx(2.0 * n * 128)

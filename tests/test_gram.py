@@ -1,0 +1,100 @@
+"""Property tests for the paper's gram-volume machinery (Eq. 5-8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gram import contrastive_loss, gram_matrix, log_volume, volume
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _vs(seed, b, k, d):
+    return jax.random.normal(jax.random.key(seed), (b, k, d))
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(4, 32))
+def test_volume_nonnegative_and_le_one(seed, k, d):
+    """Normalized vectors: V = sqrt(det(G)) in (0, 1]."""
+    v = volume(_vs(seed, 4, k, d))
+    assert bool(jnp.all(v >= 0))
+    assert bool(jnp.all(v <= 1.0 + 1e-3))
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5))
+def test_volume_permutation_invariant(seed, k):
+    vs = _vs(seed, 3, k, 16)
+    perm = np.random.default_rng(seed).permutation(k)
+    a = log_volume(vs)
+    b = log_volume(vs[:, perm])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@given(st.integers(0, 10_000))
+def test_volume_scale_invariant(seed):
+    """Normalization inside gram_matrix makes volume scale-invariant."""
+    vs = _vs(seed, 2, 3, 16)
+    np.testing.assert_allclose(np.asarray(log_volume(vs)),
+                               np.asarray(log_volume(3.7 * vs)), atol=1e-4)
+
+
+def test_duplicate_vectors_give_zero_volume():
+    v = jax.random.normal(jax.random.key(0), (1, 1, 16))
+    vs = jnp.concatenate([v, v], axis=1)          # identical pair
+    assert float(volume(vs)[0]) < 0.02
+
+
+def test_orthogonal_vectors_give_unit_volume():
+    vs = jnp.eye(4)[None, :3, :]                  # 3 orthonormal vectors
+    np.testing.assert_allclose(float(volume(vs)[0]), 1.0, atol=1e-3)
+
+
+@given(st.integers(0, 10_000), st.integers(3, 6))
+def test_masked_volume_equals_subset_volume(seed, k):
+    """Identity-masking absent rows == volume of the present subset —
+    the exactness property the MER handling relies on."""
+    vs = _vs(seed, 2, k, 16)
+    rng = np.random.default_rng(seed)
+    mask = rng.random(k) < 0.6
+    mask[0] = True
+    m = jnp.asarray(np.broadcast_to(mask, (2, k)))
+    lv_masked = log_volume(vs, m)
+    lv_subset = log_volume(vs[:, np.where(mask)[0]])
+    np.testing.assert_allclose(np.asarray(lv_masked),
+                               np.asarray(lv_subset), atol=1e-4)
+
+
+def test_gram_matrix_psd():
+    g = gram_matrix(_vs(0, 4, 4, 16))
+    eig = jnp.linalg.eigvalsh(g)
+    assert bool(jnp.all(eig >= -1e-5))
+
+
+def test_contrastive_loss_prefers_aligned_positive():
+    """Loss must be lower when anchor aligns with its own sample's
+    modalities than when modalities are shuffled across samples."""
+    key = jax.random.key(0)
+    B, M, d = 8, 3, 16
+    base = jax.random.normal(key, (B, 1, d))
+    mods = base + 0.05 * jax.random.normal(jax.random.key(1), (B, M, d))
+    anchor = base[:, 0]
+    mask = jnp.ones((B, M), bool)
+    aligned = contrastive_loss(anchor, mods, mask, n_negatives=4)
+    shuffled = contrastive_loss(anchor, jnp.roll(mods, 3, axis=0), mask,
+                                n_negatives=4)
+    assert float(aligned) < float(shuffled)
+
+
+def test_contrastive_loss_grad_finite_with_missing_modalities():
+    B, M, d = 4, 3, 8
+    anchor = jax.random.normal(jax.random.key(0), (B, d))
+    mods = jax.random.normal(jax.random.key(1), (B, M, d))
+    mask = jnp.array([[True, False, True]] * B)
+    mods = mods * mask[..., None]
+
+    def f(m):
+        return contrastive_loss(anchor, m, mask, n_negatives=2)
+    g = jax.grad(f)(mods)
+    assert bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,Sq,Sk,D", [
+    (1, 2, 2, 64, 64, 32),
+    (2, 4, 2, 128, 128, 64),
+    (1, 4, 1, 64, 128, 32),      # MQA, Sq != Sk
+])
+@pytest.mark.parametrize("window", [0, 16])
+def test_flash_attention(B, H, K, Sq, Sk, D, window, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, D), dtype)
+    out = ops.attention(q, k, v, causal=True, window=window, bq=32, bk=32)
+    kr = jnp.repeat(k, H // K, 2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, H // K, 2).transpose(0, 2, 1, 3)
+    expect = ref.attention_ref(q.transpose(0, 2, 1, 3), kr, vr, causal=True,
+                               window=window or None)
+    expect = expect.transpose(0, 2, 1, 3).reshape(B, Sq, H * D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shape_independence():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    a = ops.attention(q, k, v, bq=32, bk=32)
+    b = ops.attention(q, k, v, bq=128, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gram volume
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,k,d", [(32, 2, 16), (64, 4, 32), (128, 5, 64),
+                                   (16, 8, 8)])
+def test_gram_volume(B, k, d, dtype):
+    vs = jax.random.normal(jax.random.key(2), (B, k, d), dtype)
+    mask = jax.random.bernoulli(jax.random.key(3), 0.7, (B, k))
+    got = ops.gram_log_volume(vs, mask)
+    want = ref.gram_log_volume_ref(vs, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=1e-2)
+
+
+def test_gram_volume_no_mask():
+    vs = jax.random.normal(jax.random.key(4), (64, 3, 16))
+    np.testing.assert_allclose(np.asarray(ops.gram_log_volume(vs)),
+                               np.asarray(ref.gram_log_volume_ref(vs)),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# lora matmul
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,r", [(64, 64, 64, 4), (128, 256, 128, 8),
+                                     (256, 128, 64, 16)])
+def test_lora_matmul(M, K, N, r, dtype):
+    ks = jax.random.split(jax.random.key(5), 4)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    a = jax.random.normal(ks[2], (K, r), dtype)
+    b = jax.random.normal(ks[3], (r, N), dtype)
+    got = ops.lora_matmul(x, w, a, b, scale=2.0, bm=64, bn=64, bk=64)
+    want = ref.lora_matmul_ref(x, w, a, b, 2.0)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want),
+        atol=(2.0 if dtype == jnp.bfloat16 else 1e-3),
+        rtol=(5e-2 if dtype == jnp.bfloat16 else 1e-4))
+
+
+# ---------------------------------------------------------------------------
+# ssd
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 32, 2, 8, 1, 4, 8),
+    (2, 64, 4, 16, 2, 8, 16),
+    (1, 128, 2, 32, 1, 16, 32),
+])
+def test_ssd_chunk_kernel_vs_recurrent(B, S, H, P, G, N, chunk):
+    ks = jax.random.split(jax.random.key(6), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.2)
+    B_ = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    C_ = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    got = ops.ssd_chunked(x, dt, A, B_, C_, chunk=chunk)
+    want = ref.ssd_recurrent_ref(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_jnp_chunked_matches_kernel_path():
+    from repro.models.ssm import ssd_reference
+    ks = jax.random.split(jax.random.key(7), 5)
+    B, S, H, P, G, N = 2, 64, 4, 16, 2, 8
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.2)
+    B_ = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    C_ = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    a = ssd_reference(x, dt, A, B_, C_, 16)
+    b = ops.ssd_chunked(x, dt, A, B_, C_, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-3)

@@ -1,0 +1,86 @@
+"""MMA (Eq. 13) and SE-CCL (Eq. 14-16) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mma
+from repro.core.seccl import pooled_kl, kt_loss
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# MMA
+
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=20))
+def test_mma_weights_sum_to_one(counts):
+    w = mma.aggregation_weights(counts)
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, atol=1e-6)
+    assert bool(jnp.all(w > 0))
+
+
+def test_mma_weights_eq13():
+    w = mma.aggregation_weights([3, 2, 1])
+    np.testing.assert_allclose(np.asarray(w), [0.5, 1 / 3, 1 / 6], atol=1e-6)
+
+
+def test_mma_richer_clients_weigh_more():
+    w = mma.aggregation_weights([1, 3])
+    assert float(w[1]) == pytest.approx(3 * float(w[0]))
+
+
+@given(st.integers(0, 100))
+def test_aggregate_identity_on_equal_uploads(seed):
+    up = {"a": jax.random.normal(jax.random.key(seed), (4, 3))}
+    agg = mma.aggregate([up, up, up], mma.aggregation_weights([1, 2, 3]))
+    np.testing.assert_allclose(np.asarray(agg["a"]), np.asarray(up["a"]),
+                               atol=1e-5)
+
+
+def test_aggregate_weighted_mean():
+    a = {"x": jnp.ones((2,))}
+    b = {"x": jnp.zeros((2,))}
+    agg = mma.aggregate([a, b], jnp.array([0.25, 0.75]))
+    np.testing.assert_allclose(np.asarray(agg["x"]), [0.25, 0.25], atol=1e-6)
+
+
+def test_mma_psum_weights_single_device():
+    w = mma.mma_psum_weights(jnp.array([2, 3]), axis_names=())
+    np.testing.assert_allclose(float(w), 1.0)   # one shard owns everything
+
+
+# ---------------------------------------------------------------------------
+# SE-CCL pooled KL
+
+def test_pooled_kl_zero_for_identical():
+    y = jax.random.normal(jax.random.key(0), (2, 8, 32))
+    assert float(pooled_kl(y, y)) == pytest.approx(0.0, abs=1e-5)
+
+
+@given(st.integers(0, 1000))
+def test_pooled_kl_nonnegative(seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(k1, (2, 8, 32))
+    b = jax.random.normal(k2, (2, 8, 32))
+    assert float(pooled_kl(a, b)) >= -1e-6
+
+
+def test_pooled_kl_handles_mismatched_seq_and_vocab():
+    """The paper's SLM/LLM pairs differ in both S and V — pooling must
+    align them (S=min, V=min via average pooling)."""
+    a = jax.random.normal(jax.random.key(0), (2, 12, 50257))
+    b = jax.random.normal(jax.random.key(1), (2, 8, 50400))
+    v = float(pooled_kl(a, b))
+    assert np.isfinite(v) and v >= 0
+
+
+def test_kt_loss_stops_teacher_gradient():
+    a = jax.random.normal(jax.random.key(0), (1, 4, 8))
+    b = jax.random.normal(jax.random.key(1), (1, 4, 8))
+    g_teacher = jax.grad(lambda t: kt_loss(a, t))(b)
+    assert float(jnp.max(jnp.abs(g_teacher))) == 0.0
+    g_student = jax.grad(lambda s: kt_loss(s, b))(a)
+    assert float(jnp.max(jnp.abs(g_student))) > 0.0

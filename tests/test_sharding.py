@@ -1,0 +1,112 @@
+"""Sharding rules / partition-spec unit tests (no multi-device runtime —
+pure spec functions against a fake 16x16 mesh)."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.sharding.partition import (kv_cache_axes, logical_axes_for,
+                                      param_pspecs)
+from repro.sharding.rules import rules_for
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+SIZES = {"data": 16, "model": 16}
+
+
+def _specs_for(arch):
+    cfg = get_config(arch).reduced()
+    bundle = build_model(cfg)
+    structs = jax.eval_shape(lambda: bundle.init(jax.random.key(0)))
+    return param_pspecs(structs, rules_for("train", False)), structs
+
+
+def test_dense_param_specs():
+    specs, _ = _specs_for("qwen3-1.7b")
+    assert specs["tok"]["embed"] == P("model", None)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", None)
+    assert specs["layers"]["ln1"] == P(None, None)
+
+
+def test_moe_param_specs_fsdp():
+    specs, _ = _specs_for("qwen3-moe-235b-a22b")
+    # experts on model, d_model FSDP on data, ff local
+    assert specs["layers"]["moe"]["we_gate"] == P(None, "model", "data", None)
+    assert specs["layers"]["moe"]["we_down"] == P(None, "model", None, "data")
+
+
+def test_ssm_param_specs():
+    specs, _ = _specs_for("mamba2-2.7b")
+    assert specs["layers"]["ssm"]["in_proj"] == P(None, None, "model")
+    assert specs["layers"]["ssm"]["out_proj"] == P(None, "model", None)
+
+
+def test_lora_specs_follow_target_dims():
+    specs, _ = _specs_for("qwen3-1.7b")
+    attn = specs["layers"]["attn"]
+    assert attn["wq_lora_a"] == P(None, None, None)
+    assert attn["wq_lora_b"] == P(None, None, "model")
+    assert attn["wo_lora_a"] == P(None, "model", None)
+    assert attn["wo_lora_b"] == P(None, None, None)
+
+
+def test_param_specs_sanitized_against_shape():
+    """hymba's fused in_proj width (not 16-divisible) must degrade to
+    replication instead of crashing."""
+    cfg = get_config("hymba-1.5b")
+    bundle = build_model(cfg)
+    structs = jax.eval_shape(lambda: bundle.init(jax.random.key(0)))
+    specs = param_pspecs(structs, rules_for("train", False), MESH)
+    in_proj = structs["layers"]["ssm"]["in_proj"]
+    assert in_proj.shape[-1] % 16 != 0          # the motivating case
+    assert specs["layers"]["ssm"]["in_proj"] == P(None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache sharding policy
+
+def test_kv_cache_batch_sharded_when_divisible():
+    b, s, k = kv_cache_axes(B=128, Sc=32768, K=8, sizes=SIZES,
+                            multi_pod=False)
+    assert b == ("data",)
+    assert k is None            # 8 kv heads not divisible by 16
+    assert s == ("model",)      # falls back to sequence-model sharding
+
+
+def test_kv_cache_seq_sharded_for_batch1():
+    b, s, k = kv_cache_axes(B=1, Sc=524288, K=1, sizes=SIZES,
+                            multi_pod=False)
+    assert b is None
+    assert s == ("data", "model")
+
+
+def test_kv_cache_heads_sharded_when_possible():
+    b, s, k = kv_cache_axes(B=128, Sc=32768, K=16, sizes=SIZES,
+                            multi_pod=False)
+    assert b == ("data",) and k == "model" and s is None
+
+
+def test_kv_cache_multipod_batch():
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    b, s, k = kv_cache_axes(B=128, Sc=32768, K=16, sizes=sizes,
+                            multi_pod=True)
+    assert b == ("pod", "data") and k == "model"
+
+
+def test_logical_axes_flat_path_keys():
+    leaf = jnp.zeros((8, 4))
+    axes = logical_axes_for(
+        (jax.tree_util.DictKey("layers/attn/wq_lora_a"),), leaf)
+    assert axes == ("embed", "replicated")

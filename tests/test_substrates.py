@@ -1,0 +1,135 @@
+"""Optimizer / checkpoint / data-pipeline substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing import CheckpointManager, load_pytree, save_pytree
+from repro.data.multimodal import mer_partition, paper_split, train_test_split
+from repro.data.pipeline import batches, eval_batches
+from repro.data.synthetic import synthetic_multimodal_corpus
+from repro.optim.adamw import adamw, apply_updates, global_norm, sgd
+from repro.optim.schedule import cosine_warmup
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+
+def test_adamw_minimizes_quadratic():
+    opt = adamw(0.1)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.05
+
+
+def test_adamw_bf16_params_f32_moments():
+    opt = adamw(1e-2)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    updates, state = opt.update(g, state, params)
+    assert updates["w"].dtype == jnp.bfloat16
+
+
+def test_clipping_bounds_update_norm():
+    opt = adamw(1.0, clip_norm=1.0)
+    params = {"x": jnp.zeros((3,))}
+    state = opt.init(params)
+    g = {"x": jnp.array([1e6, 1e6, 1e6])}
+    updates, _ = opt.update(g, state, params)
+    assert float(global_norm(updates)) < 10.0
+
+
+def test_cosine_warmup_schedule():
+    f = cosine_warmup(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-6)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-3)
+
+
+def test_sgd_momentum_runs():
+    opt = sgd(0.1, momentum=0.9)
+    p = {"x": jnp.array([1.0])}
+    s = opt.init(p)
+    u, s = opt.update({"x": jnp.array([1.0])}, s, p)
+    assert u["x"].shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.array(3, jnp.int32)}}
+    path = os.path.join(tmp_path, "ck")
+    save_pytree(path, tree)
+    back = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        assert jnp.array_equal(a, b)
+
+
+def test_checkpoint_manager_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(files) == 2
+    restored = mgr.restore(tree)
+    assert jnp.array_equal(restored["x"], tree["x"])
+
+
+# ---------------------------------------------------------------------------
+# data
+
+@given(st.integers(0, 1000), st.floats(0.1, 1.0))
+def test_mer_partition_every_device_has_a_modality(seed, rho):
+    masks = mer_partition(seed, 5, 3, rho)
+    assert masks.shape == (5, 3)
+    assert masks.any(axis=1).all()
+
+
+def test_paper_split_fractions():
+    corpus = synthetic_multimodal_corpus(0, 400, 16, 64, 3, 3, 16)
+    public, privates = paper_split(corpus, 3, 0)
+    n_pub = public["tokens"].shape[0]
+    n_priv = sum(p["tokens"].shape[0] for p in privates)
+    assert n_pub == 100 and n_priv == 300
+    # no overlap
+    ids = set(map(tuple, public["tokens"]))
+    assert len(privates) == 3
+
+
+def test_corpus_template_predictable_from_class():
+    c = synthetic_multimodal_corpus(0, 64, 16, 64, 3, 2, 8, template_len=4)
+    # same class -> identical template region
+    cls = c["label"]
+    t0 = c["tokens"][cls == cls[0]][:, -4:]
+    assert (t0 == t0[0]).all()
+
+
+def test_batches_mask_zeroes_features():
+    c = synthetic_multimodal_corpus(0, 64, 16, 64, 3, 3, 16)
+    mask = np.array([True, False, True])
+    b = next(batches(c, 8, 0, mask))
+    assert not bool(b["modality_mask"][:, 1].any())
+    assert float(jnp.abs(b["modality_feats"][:, 1]).max()) == 0.0
+
+
+def test_eval_batches_cover_all_rows():
+    c = synthetic_multimodal_corpus(0, 30, 16, 64, 3, 2, 16)
+    seen = sum(1 for _ in eval_batches(c, 8))
+    assert seen == 4   # ceil(30/8), padded
