@@ -7,6 +7,8 @@ import json
 import os
 import time
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core.federated import FederatedConfig, FederatedRunner
 from repro.data.synthetic import synthetic_multimodal_corpus
@@ -57,17 +59,41 @@ METHOD_CONFIGS = {
 }
 
 
-def run_method(method: str, corpus, rho: float, rounds: int = 3,
-               n_devices: int = 3, seed: int = 0, **extra):
+def make_runner(method: str, corpus, rho: float, rounds: int = 3,
+                n_devices: int = 3, seed: int = 0, **extra
+                ) -> FederatedRunner:
     overrides, rank = METHOD_CONFIGS[method]
     fc = FederatedConfig(n_devices=n_devices, rounds=rounds,
                          local_steps_ccl=2, local_steps_amt=2,
                          server_steps=2, batch_size=8, lr=1e-2, rho=rho,
                          seed=seed, **{**overrides, **extra})
-    runner = FederatedRunner(fc, build_model(slm_cfg(rank)),
-                             build_model(llm_cfg()), corpus)
+    return FederatedRunner(fc, build_model(slm_cfg(rank)),
+                           build_model(llm_cfg()), corpus)
+
+
+def run_method(method: str, corpus, rho: float, rounds: int = 3,
+               n_devices: int = 3, seed: int = 0, **extra):
+    runner = make_runner(method, corpus, rho, rounds=rounds,
+                         n_devices=n_devices, seed=seed, **extra)
     hist = runner.run()
     return hist[-1]["summary"], hist
+
+
+def time_rounds(runner: FederatedRunner, n_rounds: int = 3) -> dict:
+    """Per-round wall-clock with evaluation disabled — measures the engine
+    itself.  The first round (jit compilation + warmup) is reported
+    separately as ``compile_s``."""
+    with Timer() as t0:
+        runner.run_round(evaluate=False)
+        runner.sync()
+    times = []
+    for _ in range(n_rounds):
+        with Timer() as t:
+            runner.run_round(evaluate=False)
+            runner.sync()
+        times.append(t.s)
+    return {"compile_s": t0.s, "round_s": times,
+            "mean_round_s": float(np.mean(times))}
 
 
 def save_result(name: str, payload) -> str:

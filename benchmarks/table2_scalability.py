@@ -1,29 +1,75 @@
-"""Paper Table 2: client scaling (3 -> 5 -> 10 -> 20 devices).
-Validation target: only marginal client-side degradation with more devices."""
+"""Paper Table 2: client scaling — now an N-devices x engine sweep.
+
+Validation targets: (a) only marginal client-side degradation with more
+devices (the paper's claim), and (b) the vectorized engine's fused round
+beats the sequential loop engine's O(N) host dispatch wall-clock as N grows
+(the roadmap's scalability claim; asserted at N=16 by the acceptance
+criteria).  Per (n, engine) cell we time ``timing_rounds`` rounds with
+evaluation disabled (compile round reported separately), then run one
+evaluated round for the paper metrics.
+
+  PYTHONPATH=src python benchmarks/table2_scalability.py --engine both
+"""
 from __future__ import annotations
 
-from benchmarks.common import run_method, save_result, vast_corpus
+import argparse
+
+from benchmarks.common import (make_runner, save_result, time_rounds,
+                               vast_corpus)
+
+ENGINES = ("loop", "vectorized")
 
 
-def run(fast: bool = True):
-    counts = [3, 5] if fast else [3, 5, 10, 20]
+def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3):
+    counts = [4, 16] if fast else [4, 16, 64]
+    engines = ENGINES if engine == "both" else (engine,)
     corpus = vast_corpus(n=768)
     table = {}
     for n in counts:
-        summ, _ = run_method("ml-ecs", corpus, rho=0.8, rounds=2,
-                             n_devices=n)
-        table[f"n{n}"] = summ
-        print(f"table2 devices={n:2d} avg_acc={summ['avg_acc']:.3f} "
-              f"best={summ['best_acc']:.3f} worst={summ['worst_acc']:.3f} "
-              f"server={summ['server_acc']:.3f}")
+        entry = {}
+        for eng in engines:
+            runner = make_runner("ml-ecs", corpus, rho=0.8, rounds=2,
+                                 n_devices=n, engine=eng)
+            timing = time_rounds(runner, timing_rounds)
+            summ = runner.run_round(evaluate=True)["summary"]
+            entry[eng] = {"summary": summ, **timing}
+            print(f"table2 devices={n:2d} engine={eng:10s} "
+                  f"round={timing['mean_round_s']:.3f}s "
+                  f"(compile {timing['compile_s']:.1f}s) "
+                  f"avg_acc={summ['avg_acc']:.3f} "
+                  f"server={summ['server_acc']:.3f}")
+        if len(entry) == 2:
+            entry["speedup"] = (entry["loop"]["mean_round_s"]
+                                / max(entry["vectorized"]["mean_round_s"],
+                                      1e-9))
+            print(f"table2 devices={n:2d} vectorized speedup "
+                  f"{entry['speedup']:.2f}x")
+        table[f"n{n}"] = entry
     save_result("table2_scalability", table)
     return table
 
 
 def rows_csv(table):
-    return [f"table2/{k},{v['avg_acc']:.4f},server={v['server_acc']:.4f}"
-            for k, v in table.items()]
+    rows = []
+    for k, v in table.items():
+        for eng in ENGINES:
+            if eng not in v:
+                continue
+            s = v[eng]["summary"]
+            rows.append(f"table2/{k}/{eng},{s['avg_acc']:.4f},"
+                        f"round_s={v[eng]['mean_round_s']:.4f}")
+        if "speedup" in v:
+            rows.append(f"table2/{k}/speedup,{v['speedup']:.2f},x")
+    return rows
 
 
 if __name__ == "__main__":
-    run(fast=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("loop", "vectorized", "both"),
+                    default="both")
+    ap.add_argument("--fast", action="store_true",
+                    help="N in {4,16} instead of {4,16,64}")
+    ap.add_argument("--timing-rounds", type=int, default=3)
+    args = ap.parse_args()
+    run(fast=args.fast, engine=args.engine,
+        timing_rounds=args.timing_rounds)

@@ -107,6 +107,38 @@ def make_local_step(bundle: ModelBundle, optimizer: Optimizer,
     return jax.jit(step, static_argnames=()) if jit else step
 
 
+def make_stacked_step(bundle: ModelBundle, optimizer: Optimizer,
+                      trainable: Callable[[str], bool] = lora.default_trainable,
+                      ccl_weight: float = 0.5, n_negatives: int = 8,
+                      with_anchor: bool = True, prox_weight: float = 0.0,
+                      ccl_score: str = "volume"):
+    """Device-stacked local step: one ``jax.vmap`` over the leading client
+    axis replaces N sequential :func:`make_local_step` dispatches.
+
+    All stacked arguments carry a leading ``device`` dim — ``params`` /
+    ``opt_state`` pytrees with ``(N, ...)`` leaves, ``batch`` ``(N, B, ...)``
+    and ``anchor`` ``(N, B, c)``; ``global_ref`` (FedProx pull) is shared
+    across clients.  Unjitted on purpose: the vectorized federated engine
+    scans it inside one fused round function.
+    """
+    step = make_local_step(bundle, optimizer, trainable=trainable,
+                           ccl_weight=ccl_weight, n_negatives=n_negatives,
+                           with_anchor=with_anchor, jit=False,
+                           prox_weight=prox_weight, ccl_score=ccl_score)
+
+    def stacked_step(params, opt_state, batch, anchor=None, global_ref=None):
+        return jax.vmap(step, in_axes=(0, 0, 0, 0, None))(
+            params, opt_state, batch, anchor, global_ref)
+
+    return stacked_step
+
+
+def stacked_server_anchors(params, bundle: ModelBundle, batch: Dict):
+    """Per-device anchors from the shared server LLM: batch leaves are
+    ``(N, B, ...)``, the server parameters are broadcast (in_axes=None)."""
+    return jax.vmap(lambda b: server_anchors(params, bundle, b))(batch)
+
+
 def server_anchors(params, bundle: ModelBundle, batch: Dict):
     """Fused omni-modal representations s' from the server's unified model
     (Alg. 1 line 3) — distributed to devices as CCL anchors."""

@@ -1,4 +1,4 @@
-"""The ML-ECS federated orchestrator — Algorithm 1 end to end.
+"""The ML-ECS federated orchestrator — Algorithm 1 end to end, two engines.
 
 One cloud server (unified LLM model + a server-side SLM) and N edge devices
 (unified SLM models with heterogeneous modality availability).  Per round t:
@@ -10,6 +10,25 @@ One cloud server (unified LLM model + a server-side SLM) and N edge devices
   4. server runs SE-CCL — bidirectional pooled-KL transfer between its SLM
      and LLM on the public data (Eq. 15-16);
   5. the server SLM's LoRA params are redistributed to every device.
+
+Two interchangeable engines drive a round:
+
+* ``engine="loop"`` — the reference host simulation: a Python loop over
+  devices with per-device jitted steps and host-side upload lists.  O(N)
+  dispatch overhead; kept as the numerical ground truth.
+* ``engine="vectorized"`` (default) — every device's state is stacked on a
+  leading ``device`` axis (full params/opt pytrees; trainable uploads as
+  :class:`repro.core.lora.StackedClients`) and one *fused, jitted* round
+  function runs the whole protocol: ``lax.scan`` over local steps of a
+  ``vmap``-ed CCL/AMT step, MMA weighting + aggregation as a single stacked
+  contraction, SE-CCL scanned on the server, and redistribution as a
+  broadcast — uploads never materialize as Python lists.  Per-device data
+  comes pre-batched from :func:`repro.data.pipeline.stacked_batches`, which
+  replays the exact per-device shuffle streams of the loop engine, so both
+  engines see identical data and agree on round summaries to ~1e-5.  With a
+  ``mesh``, the stacked axis is placed on the "data" mesh axis
+  (``NamedSharding``) so N clients parallelize across chips; on the
+  single-device host mesh the placement is a no-op and results are exact.
 
 Ablation switches (use_mma / use_seccl / use_ccl) give the paper's Fig. 4
 variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
@@ -27,9 +46,12 @@ from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
 from repro.core.connector import connector_prefix
 from repro.data.multimodal import mer_partition, paper_split, train_test_split
-from repro.data.pipeline import batches, eval_batches
+from repro.data.pipeline import (batches, eval_batches, np_batches,
+                                 stack_steps, stacked_batches)
 from repro.models.model import ModelBundle, build_model
 from repro.optim.adamw import adamw, apply_updates
+from repro.sharding import partition as shard_part
+from repro.sharding.rules import TRAIN_RULES
 
 
 @dataclasses.dataclass
@@ -44,6 +66,7 @@ class FederatedConfig:
     rho: float = 0.7                 # modality existing rate (MER)
     n_negatives: int = 4
     seed: int = 0
+    engine: str = "vectorized"       # vectorized (fused round) | loop (ref)
     # ablations / baselines
     use_mma: bool = True             # False -> uniform averaging (w/o MMA)
     use_seccl: bool = True           # False -> skip step 4     (w/o SE-CCL)
@@ -57,11 +80,18 @@ class FederatedConfig:
 
 
 class FederatedRunner:
-    """Simulates the edge-cloud environment on host (the paper's N=3..20)."""
+    """Simulates the edge-cloud environment (the paper's N=3..20 and the
+    roadmap's N>>20 sweeps).  ``engine`` overrides ``cfg.engine``; ``mesh``
+    (optional) shards the vectorized engine's client stack across chips."""
 
     def __init__(self, cfg: FederatedConfig, slm_bundle: ModelBundle,
-                 llm_bundle: ModelBundle, corpus: Dict[str, np.ndarray]):
+                 llm_bundle: ModelBundle, corpus: Dict[str, np.ndarray],
+                 mesh=None, engine: Optional[str] = None):
         self.cfg = cfg
+        self.engine = engine or cfg.engine
+        if self.engine not in ("loop", "vectorized"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        self.mesh = mesh
         self.slm = slm_bundle
         self.llm = llm_bundle
         key = jax.random.key(cfg.seed)
@@ -80,7 +110,7 @@ class FederatedRunner:
         self.masks = mer_partition(cfg.seed, cfg.n_devices, M, cfg.rho)
 
         # models
-        self.device_params = [
+        device_params = [
             ccl_lib.init_unified(keys[j], self.slm)
             for j in range(cfg.n_devices)]
         self.server_llm = ccl_lib.init_unified(keys[-1], self.llm)
@@ -89,37 +119,106 @@ class FederatedRunner:
         # optimizers (trainable = LoRA + connector, the paper's AMT set)
         opt = adamw(cfg.lr, weight_decay=0.0)
         self.opt = opt
-        self.device_opt = [
-            opt.init(lora.partition(p)) for p in self.device_params]
+        device_opt = [opt.init(lora.partition(p)) for p in device_params]
         self.server_llm_opt = opt.init(lora.partition(self.server_llm))
         self.server_slm_opt = opt.init(lora.partition(self.server_slm))
 
-        ccl_w = 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
-        self._dev_ccl_step = ccl_lib.make_local_step(
-            self.slm, opt, ccl_weight=ccl_w, n_negatives=cfg.n_negatives,
-            ccl_score=cfg.ccl_score)
-        self._dev_amt_step = ccl_lib.make_local_step(
-            self.slm, opt, ccl_weight=0.0, with_anchor=False,
-            prox_weight=cfg.prox_weight)
         self.last_global = lora.partition(self.server_slm, lora.is_lora_leaf)
-        self._anchor_fn = jax.jit(
-            lambda p, b: ccl_lib.server_anchors(p, self.llm, b))
-        self._se_step = self._make_seccl_step()
+        self._se_step_raw = self._make_seccl_step()
+        self._se_step = jax.jit(self._se_step_raw)
 
-        # data iterators
+        # MMA weights (Eq. 13) depend only on the static MER masks
+        counts = [int(self.masks[j].sum()) for j in range(cfg.n_devices)]
+        if cfg.use_mma and cfg.mode == "mlecs":
+            self._agg_weights = mma.aggregation_weights(counts)
+        else:
+            self._agg_weights = jnp.ones((cfg.n_devices,)) / cfg.n_devices
+
         bs = cfg.batch_size
-        self.pub_iters = [
-            batches(self.public_train, bs, cfg.seed + 100 + j, self.masks[j])
-            for j in range(cfg.n_devices)]
-        self.pub_iter_server = batches(self.public_train, bs, cfg.seed + 999)
-        self.priv_iters = [
-            batches(self.priv_train[j], bs, cfg.seed + 200 + j, self.masks[j])
-            for j in range(cfg.n_devices)]
+        if self.engine == "vectorized":
+            self._device_params = None
+            self._device_opt = None
+            self.stacked_params = lora.stack_trees(device_params)
+            self.stacked_opt = lora.stack_trees(device_opt)
+            # device-stacked iterators replaying the loop engine's streams
+            self._pub_stacked = stacked_batches(
+                [self.public_train] * cfg.n_devices, bs,
+                [cfg.seed + 100 + j for j in range(cfg.n_devices)],
+                self.masks)
+            self._priv_stacked = stacked_batches(
+                self.priv_train, bs,
+                [cfg.seed + 200 + j for j in range(cfg.n_devices)],
+                self.masks)
+            self._server_np_iter = np_batches(self.public_train, bs,
+                                              cfg.seed + 999)
+            self._round_fn = self._make_vectorized_round()
+            if mesh is not None:
+                self._place_on_mesh(mesh)
+        else:
+            self._device_params = device_params
+            self._device_opt = device_opt
+            ccl_w = 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
+            self._dev_ccl_step = ccl_lib.make_local_step(
+                self.slm, opt, ccl_weight=ccl_w,
+                n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
+            self._dev_amt_step = ccl_lib.make_local_step(
+                self.slm, opt, ccl_weight=0.0, with_anchor=False,
+                prox_weight=cfg.prox_weight)
+            self._anchor_fn = jax.jit(
+                lambda p, b: ccl_lib.server_anchors(p, self.llm, b))
+            self.pub_iters = [
+                batches(self.public_train, bs, cfg.seed + 100 + j,
+                        self.masks[j])
+                for j in range(cfg.n_devices)]
+            self.pub_iter_server = batches(self.public_train, bs,
+                                           cfg.seed + 999)
+            self.priv_iters = [
+                batches(self.priv_train[j], bs, cfg.seed + 200 + j,
+                        self.masks[j])
+                for j in range(cfg.n_devices)]
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------
+    @property
+    def device_params(self) -> List:
+        """Per-device full parameter trees (unstacked view under the
+        vectorized engine)."""
+        if self.engine == "vectorized":
+            return lora.unstack_tree(self.stacked_params, self.cfg.n_devices)
+        return self._device_params
+
+    @property
+    def device_opt(self) -> List:
+        if self.engine == "vectorized":
+            return lora.unstack_tree(self.stacked_opt, self.cfg.n_devices)
+        return self._device_opt
+
+    # ------------------------------------------------------------------
+    def _place_on_mesh(self, mesh):
+        """Shard the client stack over the mesh "data" axis, replicate the
+        server; exact no-op on a (1, 1) host mesh."""
+        def clients(tree):
+            return jax.device_put(tree, shard_part.stacked_client_shardings(
+                tree, mesh, TRAIN_RULES, axis=0))
+
+        def repl(tree):
+            return jax.device_put(
+                tree, shard_part.replicated_shardings(tree, mesh))
+
+        self.stacked_params = clients(self.stacked_params)
+        self.stacked_opt = clients(self.stacked_opt)
+        self.server_llm = repl(self.server_llm)
+        self.server_slm = repl(self.server_slm)
+        self.server_llm_opt = repl(self.server_llm_opt)
+        self.server_slm_opt = repl(self.server_slm_opt)
+        self.last_global = repl(self.last_global)
+        self._agg_weights = repl(self._agg_weights)
+
+    # ------------------------------------------------------------------
     def _make_seccl_step(self):
-        """Joint SE-CCL update: LLM minimizes Eq. 15, SLM minimizes Eq. 16."""
+        """Joint SE-CCL update: LLM minimizes Eq. 15, SLM minimizes Eq. 16.
+        Returned unjitted — the loop engine jits it per call, the vectorized
+        engine scans it inside the fused round."""
         cfg = self.cfg
 
         def loss_pair(train_llm, train_slm, llm_params, slm_params, batch):
@@ -155,19 +254,154 @@ class FederatedRunner:
             slm_params = lora.combine(slm_params, apply_updates(t_slm, u))
             return llm_params, slm_params, llm_opt, slm_opt, metrics
 
-        return jax.jit(step)
+        return step
 
     # ------------------------------------------------------------------
-    def run_round(self) -> Dict:
+    def _make_vectorized_round(self):
+        """Build the fused round function: device phase (vmap over the
+        stacked client axis, scan over local steps), MMA aggregation,
+        SE-CCL, and redistribution in ONE jitted call."""
+        cfg = self.cfg
+        llm = self.llm
+        ccl_w = 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
+        ccl_step = ccl_lib.make_stacked_step(
+            self.slm, self.opt, ccl_weight=ccl_w,
+            n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
+        amt_step = ccl_lib.make_stacked_step(
+            self.slm, self.opt, ccl_weight=0.0, with_anchor=False,
+            prox_weight=cfg.prox_weight)
+        se_step = self._se_step_raw
+        do_ccl = cfg.mode != "standalone" and cfg.use_ccl
+        do_seccl = cfg.mode not in ("standalone", "fedavg") and cfg.use_seccl
+
+        def round_fn(stacked_params, stacked_opt, server_llm, server_slm,
+                     server_llm_opt, server_slm_opt, last_global, weights,
+                     pub_steps, priv_steps, server_steps):
+            # (1)+(2a) anchors + device CCL, scanned over local steps
+            if do_ccl:
+                def ccl_body(carry, batch):
+                    p, o = carry
+                    anchor = ccl_lib.stacked_server_anchors(
+                        server_llm, llm,
+                        dict(batch, modality_mask=jnp.ones_like(
+                            batch["modality_mask"])))
+                    p, o, _ = ccl_step(p, o, batch, anchor)
+                    return (p, o), None
+                (stacked_params, stacked_opt), _ = jax.lax.scan(
+                    ccl_body, (stacked_params, stacked_opt), pub_steps)
+
+            # (2b) device AMT on private data
+            gref = last_global if cfg.prox_weight > 0 else None
+
+            def amt_body(carry, batch):
+                p, o = carry
+                p, o, _ = amt_step(p, o, batch, None, gref)
+                return (p, o), None
+            (stacked_params, stacked_opt), _ = jax.lax.scan(
+                amt_body, (stacked_params, stacked_opt), priv_steps)
+
+            # the models devices actually serve between rounds (client eval)
+            post_amt = stacked_params
+
+            if cfg.mode == "standalone":
+                return (post_amt, stacked_params, stacked_opt, server_llm,
+                        server_slm, server_llm_opt, server_slm_opt,
+                        last_global)
+
+            # (3) MMA aggregation (Eq. 13) over the stacked upload axis
+            uploads = lora.StackedClients(
+                lora.partition(stacked_params, lora.is_lora_leaf))
+            agg = mma.aggregate_stacked(uploads, weights)
+
+            if cfg.mode == "fedavg":
+                # Multi-FedAvg: broadcast the average straight back
+                stacked_params = lora.combine(
+                    stacked_params, uploads.broadcast(agg).trainable)
+                return (post_amt, stacked_params, stacked_opt, server_llm,
+                        server_slm, server_llm_opt, server_slm_opt, agg)
+
+            server_slm = lora.combine(server_slm, agg)
+
+            # (4) SE-CCL on the server
+            if do_seccl:
+                def se_body(carry, batch):
+                    s_llm, s_slm, o_llm, o_slm = carry
+                    s_llm, s_slm, o_llm, o_slm, _ = se_step(
+                        s_llm, s_slm, o_llm, o_slm, batch)
+                    return (s_llm, s_slm, o_llm, o_slm), None
+                (server_llm, server_slm, server_llm_opt, server_slm_opt), _ \
+                    = jax.lax.scan(
+                        se_body,
+                        (server_llm, server_slm, server_llm_opt,
+                         server_slm_opt), server_steps)
+
+            # (5) redistribute server-SLM LoRA to every device (broadcast)
+            down = lora.partition(server_slm, lora.is_lora_leaf)
+            stacked_params = lora.combine(
+                stacked_params, uploads.broadcast(down).trainable)
+            return (post_amt, stacked_params, stacked_opt, server_llm,
+                    server_slm, server_llm_opt, server_slm_opt, down)
+
+        return jax.jit(round_fn)
+
+    # ------------------------------------------------------------------
+    def run_round(self, evaluate: bool = True) -> Dict:
         """One communication round.  Client-side metrics are measured on the
         post-AMT device models (the model a device actually serves between
         rounds); server metrics after SE-CCL.  Redistribution (Alg. 1 step 5)
-        seeds the NEXT round's devices."""
+        seeds the NEXT round's devices.  ``evaluate=False`` skips metric
+        computation (benchmark timing of the engines themselves)."""
+        if self.engine == "vectorized":
+            return self._run_round_vectorized(evaluate)
+        return self._run_round_loop(evaluate)
+
+    # ------------------------------------------------------------------
+    def _run_round_vectorized(self, evaluate: bool = True) -> Dict:
+        cfg = self.cfg
+        do_ccl = cfg.mode != "standalone" and cfg.use_ccl
+        do_seccl = (cfg.mode not in ("standalone", "fedavg")
+                    and cfg.use_seccl)
+        pub = stack_steps(self._pub_stacked, cfg.local_steps_ccl) \
+            if do_ccl else None
+        priv = stack_steps(self._priv_stacked, cfg.local_steps_amt)
+        server = stack_steps(self._server_np_iter, cfg.server_steps) \
+            if do_seccl else None
+        if self.mesh is not None:
+            # clients live on axis 1 of the (steps, N, B, ...) stacks
+            def put(tree, axis):
+                if tree is None:
+                    return None
+                return jax.device_put(
+                    tree, shard_part.stacked_client_shardings(
+                        tree, self.mesh, TRAIN_RULES, axis=axis))
+            pub, priv = put(pub, 1), put(priv, 1)
+            if server is not None:
+                server = jax.device_put(
+                    server,
+                    shard_part.replicated_shardings(server, self.mesh))
+
+        (post_amt, self.stacked_params, self.stacked_opt, self.server_llm,
+         self.server_slm, self.server_llm_opt, self.server_slm_opt,
+         self.last_global) = self._round_fn(
+            self.stacked_params, self.stacked_opt, self.server_llm,
+            self.server_slm, self.server_llm_opt, self.server_slm_opt,
+            self.last_global, self._agg_weights, pub, priv, server)
+
+        if not evaluate:
+            return {}
+        client_eval = [
+            self._eval_model(lora.gather_tree_device(post_amt, j), self.slm,
+                             self.priv_test[j], self.masks[j])
+            for j in range(cfg.n_devices)]
+        return self._finalize_eval(client_eval)
+
+    # ------------------------------------------------------------------
+    def _run_round_loop(self, evaluate: bool = True) -> Dict:
         cfg = self.cfg
         # (2) device side: CCL then AMT
         uploads, counts = [], []
         for j in range(cfg.n_devices):
-            p, o = self.device_params[j], self.device_opt[j]
+            p, o = self._device_params[j], self._device_opt[j]
             if cfg.mode != "standalone" and cfg.use_ccl:
                 for _ in range(cfg.local_steps_ccl):
                     pub = next(self.pub_iters[j])
@@ -179,28 +413,32 @@ class FederatedRunner:
             for _ in range(cfg.local_steps_amt):
                 p, o, _ = self._dev_amt_step(p, o, next(self.priv_iters[j]),
                                              None, gref)
-            self.device_params[j], self.device_opt[j] = p, o
+            self._device_params[j], self._device_opt[j] = p, o
             uploads.append(lora.partition(p, lora.is_lora_leaf))
             counts.append(int(self.masks[j].sum()))
 
-        client_eval = self._evaluate_clients()
+        client_eval = self._evaluate_clients() if evaluate else None
 
         if cfg.mode == "standalone":
-            return self._finalize_eval(client_eval)
+            return self._finalize_eval(client_eval) if evaluate else {}
 
         # (3) MMA aggregation (Eq. 13) — or uniform for the ablation/fedavg
         if cfg.use_mma and cfg.mode == "mlecs":
             w = mma.aggregation_weights(counts)
         else:
             w = jnp.ones((cfg.n_devices,)) / cfg.n_devices
-        agg = mma.aggregate(uploads, w)
+        # same scan-ordered reduction as the vectorized engine: a plain
+        # eager sum rounds differently (FMA contraction) at bf16 ULP scale,
+        # which training then amplifies past the engines' 1e-5 agreement
+        agg = mma.aggregate_stacked(lora.StackedClients.stack(uploads), w)
 
         if cfg.mode == "fedavg":
             # Multi-FedAvg: broadcast the average straight back
             self.last_global = agg
             for j in range(cfg.n_devices):
-                self.device_params[j] = lora.combine(self.device_params[j], agg)
-            return self._finalize_eval(client_eval)
+                self._device_params[j] = lora.combine(
+                    self._device_params[j], agg)
+            return self._finalize_eval(client_eval) if evaluate else {}
 
         self.server_slm = lora.combine(self.server_slm, agg)
 
@@ -217,8 +455,18 @@ class FederatedRunner:
         down = lora.partition(self.server_slm, lora.is_lora_leaf)
         self.last_global = down
         for j in range(cfg.n_devices):
-            self.device_params[j] = lora.combine(self.device_params[j], down)
-        return self._finalize_eval(client_eval)
+            self._device_params[j] = lora.combine(self._device_params[j],
+                                                  down)
+        return self._finalize_eval(client_eval) if evaluate else {}
+
+    # ------------------------------------------------------------------
+    def sync(self) -> "FederatedRunner":
+        """Block until pending round computation has materialized (jax
+        dispatch is async; benchmark timing must not measure enqueue)."""
+        state = (self.stacked_params if self.engine == "vectorized"
+                 else self._device_params)
+        jax.block_until_ready((state, self.server_llm, self.server_slm))
+        return self
 
     # ------------------------------------------------------------------
     def run(self) -> List[Dict]:
@@ -228,7 +476,8 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def _evaluate_clients(self):
-        return [self._eval_model(self.device_params[j], self.slm,
+        dev = self.device_params
+        return [self._eval_model(dev[j], self.slm,
                                  self.priv_test[j], self.masks[j])
                 for j in range(self.cfg.n_devices)]
 
@@ -250,11 +499,11 @@ class FederatedRunner:
     def evaluate(self) -> Dict:
         """Test CE + template accuracy (macro-F1 for the classification
         analogue) per device and for the server unified model."""
+        dev = self.device_params
         out = {"client": [], "server": {}}
         for j in range(self.cfg.n_devices):
             out["client"].append(self._eval_model(
-                self.device_params[j], self.slm, self.priv_test[j],
-                self.masks[j]))
+                dev[j], self.slm, self.priv_test[j], self.masks[j]))
         out["server"] = self._eval_model(
             self.server_llm, self.llm, self.public_test, None)
         cs = out["client"]

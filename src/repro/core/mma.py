@@ -35,6 +35,32 @@ def aggregate(uploads: List[Dict[str, jnp.ndarray]],
     return out
 
 
+def aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
+    """Eq. 13 over a device-stacked upload set — jit/vmap friendly.
+
+    ``uploads`` is a :class:`repro.core.lora.StackedClients` (or a plain
+    flat dict with leading device axis ``(N, ...)``).  The weighted sum runs
+    as a ``lax.scan`` over the device axis rather than a tensordot: a dot
+    contraction may reassociate the f32 accumulation, and with bf16 params
+    a single reassociation ULP diverges from the sequential
+    :func:`aggregate` reference once training amplifies it.  The scan
+    reproduces the loop engine's left-to-right order bitwise, and the
+    aggregated volume (LoRA flat-dicts) is far too small for the O(N)
+    depth to matter.
+    """
+    flat = getattr(uploads, "trainable", uploads)
+    weights = jnp.asarray(weights, jnp.float32)
+
+    def body(acc, wv):
+        w, v = wv
+        acc = {k: acc[k] + w * v[k].astype(jnp.float32) for k in acc}
+        return acc, None
+
+    init = {k: jnp.zeros(v.shape[1:], jnp.float32) for k, v in flat.items()}
+    acc, _ = jax.lax.scan(body, init, (weights, flat))
+    return {k: acc[k].astype(flat[k].dtype) for k in flat}
+
+
 def mma_psum_weights(modality_counts, axis_names):
     """SPMD weighting: normalize per-shard modality counts across the data
     axes so a weighted psum implements Eq. 13 exactly.

@@ -1,29 +1,54 @@
-"""Batching: numpy -> jnp device batches with per-device modality masks."""
+"""Batching: numpy -> jnp device batches with per-device modality masks.
+
+Two shapes of iterator:
+
+* :func:`batches` / :func:`eval_batches` — per-device ``(B, ...)`` batches,
+  used by the sequential ("loop") federated engine and evaluation;
+* :func:`stacked_batches` — device-stacked ``(N, B, ...)`` batches for the
+  vectorized engine.  Each device keeps its *own* shuffle stream (same seed
+  schedule as N independent :func:`batches` iterators), so the two engines
+  consume identical data and stay numerically comparable.
+
+Both share :func:`_index_stream` for the shuffle order.
+"""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+_FIELDS = ("tokens", "loss_mask", "modality_feats", "label", "template_start")
 
-def _to_batch(data: Dict[str, np.ndarray], idx, modality_mask: Optional[np.ndarray]):
-    b = {
-        "tokens": jnp.asarray(data["tokens"][idx]),
-        "loss_mask": jnp.asarray(data["loss_mask"][idx]),
-        "modality_feats": jnp.asarray(data["modality_feats"][idx]),
-        "label": jnp.asarray(data["label"][idx]),
-        "template_start": jnp.asarray(data["template_start"][idx]),
-    }
+
+def _index_stream(n: int, batch_size: int, seed: int) -> Iterator[np.ndarray]:
+    """Infinite per-epoch-shuffled index batches (drop-last)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            yield perm[i:i + batch_size]
+
+
+def _gather_np(data: Dict[str, np.ndarray], idx,
+               modality_mask: Optional[np.ndarray]) -> Dict[str, np.ndarray]:
+    """Host-side batch assembly; modality masking applied in numpy."""
+    b = {k: data[k][idx] for k in _FIELDS}
     B, M = b["modality_feats"].shape[:2]
     if modality_mask is None:
         mm = np.ones((B, M), bool)
     else:
         mm = np.broadcast_to(np.asarray(modality_mask, bool), (B, M))
-    b["modality_mask"] = jnp.asarray(mm)
+    b["modality_mask"] = mm
     # zero features the device cannot observe
-    b["modality_feats"] = b["modality_feats"] * b["modality_mask"][..., None]
+    b["modality_feats"] = b["modality_feats"] * mm[..., None]
     return b
+
+
+def _to_batch(data: Dict[str, np.ndarray], idx,
+              modality_mask: Optional[np.ndarray]):
+    return {k: jnp.asarray(v)
+            for k, v in _gather_np(data, idx, modality_mask).items()}
 
 
 def batches(data: Dict[str, np.ndarray], batch_size: int, seed: int = 0,
@@ -31,11 +56,52 @@ def batches(data: Dict[str, np.ndarray], batch_size: int, seed: int = 0,
             ) -> Iterator[Dict[str, jnp.ndarray]]:
     """Infinite shuffled batch iterator."""
     n = data["tokens"].shape[0]
-    rng = np.random.default_rng(seed)
+    for idx in _index_stream(n, batch_size, seed):
+        yield _to_batch(data, idx, modality_mask)
+
+
+def np_batches(data: Dict[str, np.ndarray], batch_size: int, seed: int = 0,
+               modality_mask: Optional[np.ndarray] = None
+               ) -> Iterator[Dict[str, np.ndarray]]:
+    """Numpy twin of :func:`batches` (same index stream, host leaves) —
+    feed through :func:`stack_steps` for one-transfer multi-step stacks."""
+    n = data["tokens"].shape[0]
+    for idx in _index_stream(n, batch_size, seed):
+        yield _gather_np(data, idx, modality_mask)
+
+
+def stacked_batches(datas: Sequence[Dict[str, np.ndarray]], batch_size: int,
+                    seeds: Sequence[int],
+                    masks: Optional[np.ndarray] = None
+                    ) -> Iterator[Dict[str, np.ndarray]]:
+    """Device-stacked batch iterator: numpy leaves of shape ``(N, B, ...)``.
+
+    ``datas[j]`` is device j's dataset (may alias one shared public set),
+    ``seeds[j]`` its shuffle seed, ``masks[j]`` its modality-availability
+    row.  Device j's sub-stream is bit-identical to
+    ``batches(datas[j], batch_size, seeds[j], masks[j])``.  Yields numpy so
+    callers can stack several local steps and transfer once (see
+    :func:`stack_steps`).
+    """
+    n_dev = len(datas)
+    assert len(seeds) == n_dev
+    streams = [_index_stream(d["tokens"].shape[0], batch_size, s)
+               for d, s in zip(datas, seeds)]
     while True:
-        perm = rng.permutation(n)
-        for i in range(0, n - batch_size + 1, batch_size):
-            yield _to_batch(data, perm[i:i + batch_size], modality_mask)
+        per_dev = [
+            _gather_np(datas[j], next(streams[j]),
+                       None if masks is None else masks[j])
+            for j in range(n_dev)]
+        yield {k: np.stack([b[k] for b in per_dev]) for k in per_dev[0]}
+
+
+def stack_steps(it: Iterator[Dict[str, np.ndarray]], k: int
+                ) -> Dict[str, jnp.ndarray]:
+    """Pull ``k`` batches and stack them on a new leading step axis —
+    one host->device transfer per round phase instead of one per step."""
+    steps = [next(it) for _ in range(k)]
+    return {key: jnp.asarray(np.stack([s[key] for s in steps]))
+            for key in steps[0]}
 
 
 def eval_batches(data: Dict[str, np.ndarray], batch_size: int,

@@ -25,6 +25,16 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_federated_mesh(n_model: int = 1):
+    """Mesh for the vectorized federated engine: every local device joins
+    the "data" axis, which the sharding rules alias to the stacked "device"
+    (client) axis — N clients parallelize across chips.  On a single-device
+    host this degenerates to the (1, 1) host mesh, so the engine stays
+    exact there."""
+    n_data = max(1, len(jax.devices()) // max(1, n_model))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -113,6 +113,36 @@ def constrain_kv_cache(x):
 
 
 # ---------------------------------------------------------------------------
+# stacked federated clients (the vectorized engine's leading device axis)
+
+def stacked_client_shardings(tree, mesh: Mesh, rules: Rules, axis: int = 0):
+    """NamedShardings that place the stacked-clients dim on the "device"
+    logical axis (→ data mesh axis) and replicate everything else.
+
+    ``axis`` selects which dim carries the client stack (0 for state
+    pytrees, 1 for (steps, N, B, ...) pre-batched round data).  Specs are
+    sanitized per leaf, so an N that doesn't divide the data axis degrades
+    to replication — the single-device host mesh is always exact.
+    """
+    entry = rules.axis("device")
+
+    def f(leaf):
+        spec_entries = [None] * leaf.ndim
+        if leaf.ndim > axis:
+            spec_entries[axis] = entry
+        spec = _sanitize_spec(P(*spec_entries), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(f, tree)
+
+
+def replicated_shardings(tree, mesh: Mesh):
+    """Fully-replicated NamedShardings (server-side state on the client
+    mesh)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
 # parameter partitioning by leaf path
 
 # leaf-name -> logical axes of the *unstacked* (single-layer) parameter.

@@ -33,6 +33,10 @@ def _base(batch_axes: Axis, kv_seq: Axis = None) -> dict:
     return {
         # activations
         "batch": batch_axes,
+        # stacked federated clients: the leading N-devices axis of the
+        # vectorized engine's StackedClients / stacked batches parallelizes
+        # over the same chips as data parallelism
+        "device": batch_axes,
         "seq": None,
         "kv_seq": kv_seq,        # decode: KV cache sequence dim
         "embed": None,

@@ -1,0 +1,122 @@
+"""Deterministic fallback shim for ``hypothesis``.
+
+The property tests only use a small slice of the hypothesis API
+(``given`` / ``settings`` / ``strategies.integers|floats|lists``).  On a
+clean container without hypothesis installed, ``tests/conftest.py``
+registers this module in ``sys.modules`` so the suite still collects and
+runs: each ``@given`` test is executed against ``max_examples``
+deterministic pseudo-random draws (seeded per test name) instead of
+hypothesis' adaptive search.  If real hypothesis is installed it always
+wins — the shim is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from, lists=lists)
+
+
+class settings:
+    _profiles: dict = {}
+    _active: dict = {"max_examples": 20}
+
+    def __init__(self, **kw):
+        self._kw = kw
+
+    def __call__(self, fn):          # used as @settings(...) decorator
+        fn._shim_settings = self._kw
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._active = {**cls._active, **cls._profiles.get(name, {})}
+
+
+def given(*strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        # positional strategies fill the RIGHTMOST params (hypothesis
+        # semantics — fixtures stay on the left), kw strategies by name;
+        # drawn values are therefore bound by NAME, so fixtures that pytest
+        # passes as kwargs can never collide with them.
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        drawn_names = names[len(names) - len(strats):] if strats else []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = settings._active.get("max_examples", 20)
+            n = getattr(fn, "_shim_settings", {}).get("max_examples", n)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strats)}
+                drawn.update({k: s.draw(rng) for k, s in kw_strats.items()})
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        params = [p for p in sig.parameters.values()
+                  if p.name not in drawn_names and p.name not in kw_strats]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+    return deco
+
+
+def install():
+    """Register the shim as ``hypothesis`` in sys.modules (idempotent)."""
+    import sys
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

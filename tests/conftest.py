@@ -1,8 +1,18 @@
 import os
+import sys
 
 # smoke tests and benches must see ONE device (the dry-run sets 512 itself,
 # in its own process) — keep any user XLA_FLAGS out of the test env.
 os.environ.pop("XLA_FLAGS", None)
+
+# property tests import hypothesis at module scope; on a clean container
+# without it, install the deterministic shim so collection doesn't crash.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_shim import install as _install_hypothesis_shim
+    _install_hypothesis_shim()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

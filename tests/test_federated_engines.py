@@ -1,0 +1,217 @@
+"""Loop vs. vectorized federated engines: numerical equivalence, plus unit
+tests for the device-stacked representations (StackedClients, stacked MMA,
+stacked batch iterator, client-axis sharding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import lora, mma
+from repro.core.federated import FederatedConfig, FederatedRunner
+from repro.data.pipeline import batches, stack_steps, stacked_batches
+from repro.data.synthetic import synthetic_multimodal_corpus
+from repro.models.model import build_model
+
+_KW = dict(n_modalities=3, modality_dim=32, n_soft_tokens=4,
+           connector_dim=48, lora_rank=4, remat=False, activation="gelu",
+           vocab_size=128)
+
+
+def _bundles():
+    slm = ModelConfig(name="eng-slm", family="dense", n_layers=2, d_model=48,
+                      n_heads=4, n_kv_heads=2, head_dim=12, d_ff=96, **_KW)
+    llm = ModelConfig(name="eng-llm", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, **_KW)
+    return build_model(slm), build_model(llm)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic_multimodal_corpus(0, 256, 20, 128, n_classes=4,
+                                       n_modalities=3, modality_dim=32,
+                                       template_len=4)
+
+
+def _make_runner(corpus, engine, **overrides):
+    slm, llm = _bundles()
+    kw = dict(n_devices=3, rounds=2, local_steps_ccl=2, local_steps_amt=2,
+              server_steps=2, batch_size=8, lr=1e-2, rho=0.7, seed=0)
+    kw.update(overrides)
+    return FederatedRunner(FederatedConfig(engine=engine, **kw), slm, llm,
+                           corpus)
+
+
+def _assert_summaries_match(a, b, atol=1e-5):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=0, atol=atol,
+                                   err_msg=f"summary key {k!r}")
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence (the tentpole acceptance criterion)
+
+def test_engines_match_mlecs_two_rounds(corpus):
+    loop = _make_runner(corpus, "loop")
+    vec = _make_runner(corpus, "vectorized")
+    for r in range(2):
+        s_loop = loop.run_round()["summary"]
+        s_vec = vec.run_round()["summary"]
+        _assert_summaries_match(s_loop, s_vec)
+
+
+def test_engines_match_fedavg(corpus):
+    kw = dict(mode="fedavg", use_ccl=False, rounds=1)
+    s_loop = _make_runner(corpus, "loop", **kw).run_round()["summary"]
+    s_vec = _make_runner(corpus, "vectorized", **kw).run_round()["summary"]
+    _assert_summaries_match(s_loop, s_vec)
+
+
+def test_engines_match_standalone(corpus):
+    kw = dict(mode="standalone", rounds=1)
+    s_loop = _make_runner(corpus, "loop", **kw).run_round()["summary"]
+    s_vec = _make_runner(corpus, "vectorized", **kw).run_round()["summary"]
+    _assert_summaries_match(s_loop, s_vec)
+
+
+def test_vectorized_device_params_view(corpus):
+    runner = _make_runner(corpus, "vectorized", rounds=1)
+    dev = runner.device_params
+    assert len(dev) == 3
+    runner.run_round()
+    up = lora.partition(runner.device_params[0], lora.is_lora_leaf)
+    assert up and all("_lora_" in k for k in up)
+    assert all(bool(jnp.all(jnp.isfinite(v))) for v in up.values())
+
+
+def test_vectorized_with_host_mesh_is_exact(corpus):
+    from repro.launch.mesh import make_federated_mesh
+    slm, llm = _bundles()
+
+    def cfg():
+        return FederatedConfig(engine="vectorized", n_devices=3, rounds=1,
+                               local_steps_ccl=2, local_steps_amt=2,
+                               server_steps=2, batch_size=8, lr=1e-2,
+                               rho=0.7, seed=0)
+
+    plain = FederatedRunner(cfg(), slm, llm, corpus)
+    meshed = FederatedRunner(cfg(), slm, llm, corpus,
+                             mesh=make_federated_mesh())
+    _assert_summaries_match(plain.run_round()["summary"],
+                            meshed.run_round()["summary"])
+
+
+# ---------------------------------------------------------------------------
+# StackedClients
+
+def _rand_flat(key):
+    k1, k2 = jax.random.split(key)
+    return {"layers/wq_lora_a": jax.random.normal(k1, (4, 2)),
+            "connector/proj_w": jax.random.normal(k2, (3, 5))}
+
+
+def test_stacked_clients_roundtrip():
+    keys = jax.random.split(jax.random.key(0), 4)
+    clients = [_rand_flat(k) for k in keys]
+    sc = lora.StackedClients.stack(clients)
+    assert sc.n_devices == 4
+    back = sc.unstack()
+    for orig, rec in zip(clients, back):
+        assert set(orig) == set(rec)
+        for k in orig:
+            np.testing.assert_array_equal(np.asarray(orig[k]),
+                                          np.asarray(rec[k]))
+
+
+def test_stacked_clients_gather_device():
+    clients = [_rand_flat(k) for k in jax.random.split(jax.random.key(1), 3)]
+    sc = lora.StackedClients.stack(clients)
+    got = sc.gather_device(2)
+    for k in clients[2]:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(clients[2][k]))
+
+
+def test_stacked_clients_broadcast():
+    clients = [_rand_flat(k) for k in jax.random.split(jax.random.key(2), 3)]
+    sc = lora.StackedClients.stack(clients)
+    shared = clients[0]
+    b = sc.broadcast(shared)
+    for dev in b.unstack():
+        for k in shared:
+            np.testing.assert_array_equal(np.asarray(dev[k]),
+                                          np.asarray(shared[k]))
+
+
+def test_stacked_clients_is_pytree():
+    clients = [_rand_flat(k) for k in jax.random.split(jax.random.key(3), 2)]
+    sc = lora.StackedClients.stack(clients)
+    doubled = jax.jit(lambda s: jax.tree.map(lambda x: 2 * x, s))(sc)
+    assert isinstance(doubled, lora.StackedClients)
+    np.testing.assert_allclose(
+        np.asarray(doubled.trainable["connector/proj_w"]),
+        2 * np.asarray(sc.trainable["connector/proj_w"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stacked MMA aggregation vs the looped reference
+
+def test_stacked_mma_matches_looped():
+    keys = jax.random.split(jax.random.key(7), 5)
+    clients = [_rand_flat(k) for k in keys]
+    w = mma.aggregation_weights([3, 1, 2, 2, 1])
+    ref = mma.aggregate(clients, w)
+    sc = lora.StackedClients.stack(clients)
+    got = mma.aggregate_stacked(sc, w)
+    got_dict = mma.aggregate_stacked(sc.trainable, w)   # plain-dict form
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_dict[k]),
+                                   np.asarray(ref[k]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stacked batch iterator replays the per-device streams
+
+def test_stacked_batches_match_per_device_streams(corpus):
+    masks = np.array([[True, False, True], [True, True, False]])
+    datas = [corpus, corpus]
+    seeds = [11, 22]
+    stacked = stacked_batches(datas, 8, seeds, masks)
+    singles = [batches(datas[j], 8, seeds[j], masks[j]) for j in range(2)]
+    for _ in range(3):
+        sb = next(stacked)
+        for j in range(2):
+            b = next(singles[j])
+            for k in b:
+                np.testing.assert_array_equal(np.asarray(sb[k][j]),
+                                              np.asarray(b[k]),
+                                              err_msg=f"dev {j} key {k}")
+
+
+def test_stack_steps_shapes(corpus):
+    masks = np.ones((2, 3), bool)
+    it = stacked_batches([corpus, corpus], 4, [0, 1], masks)
+    out = stack_steps(it, 3)
+    assert out["tokens"].shape[:2] == (3, 2)
+    assert out["modality_feats"].shape[:3] == (3, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# client-axis sharding helpers (host mesh: degrade to replication, exact)
+
+def test_stacked_client_shardings_host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.partition import (replicated_shardings,
+                                          stacked_client_shardings)
+    from repro.sharding.rules import TRAIN_RULES
+    mesh = make_host_mesh()
+    tree = {"a": jnp.zeros((4, 3)), "b": jnp.zeros((4,))}
+    sh = stacked_client_shardings(tree, mesh, TRAIN_RULES)
+    placed = jax.device_put(tree, sh)
+    assert placed["a"].shape == (4, 3)
+    repl = replicated_shardings(tree, mesh)
+    placed2 = jax.device_put(tree, repl)
+    assert placed2["b"].shape == (4,)
