@@ -79,21 +79,38 @@ def run_method(method: str, corpus, rho: float, rounds: int = 3,
     return hist[-1]["summary"], hist
 
 
-def time_rounds(runner: FederatedRunner, n_rounds: int = 3) -> dict:
-    """Per-round wall-clock with evaluation disabled — measures the engine
-    itself.  The first round (jit compilation + warmup) is reported
-    separately as ``compile_s``."""
+def time_phases(runner: FederatedRunner, n_rounds: int = 3) -> dict:
+    """Per-phase wall-clock of a communication round: ``train`` (the fused
+    or looped round itself, ``evaluate=False`` + sync), ``eval`` (all N
+    client evals), and ``server`` (the N-independent SE-CCL public-test
+    eval).  The first full round incl. eval (jit compilation + warmup) is
+    reported as ``compile_s``; metric results sync to host floats, so each
+    phase timer measures completed work, not enqueue."""
     with Timer() as t0:
         runner.run_round(evaluate=False)
         runner.sync()
-    times = []
+        runner.evaluate_clients()
+        runner.evaluate_server()
+    train, ev, srv = [], [], []
     for _ in range(n_rounds):
         with Timer() as t:
             runner.run_round(evaluate=False)
             runner.sync()
-        times.append(t.s)
-    return {"compile_s": t0.s, "round_s": times,
-            "mean_round_s": float(np.mean(times))}
+        train.append(t.s)
+        with Timer() as t:
+            runner.evaluate_clients()
+        ev.append(t.s)
+        with Timer() as t:
+            runner.evaluate_server()
+        srv.append(t.s)
+    return {"compile_s": t0.s,
+            "train_s": train, "mean_train_s": float(np.mean(train)),
+            "eval_s": ev, "mean_eval_s": float(np.mean(ev)),
+            "server_eval_s": srv,
+            "mean_server_eval_s": float(np.mean(srv)),
+            # aliases: the train phase IS the old whole-round timing, so
+            # earlier-schema JSON consumers keep working
+            "round_s": train, "mean_round_s": float(np.mean(train))}
 
 
 def save_result(name: str, payload) -> str:

@@ -1,49 +1,65 @@
-"""Paper Table 2: client scaling — now an N-devices x engine sweep.
+"""Paper Table 2: client scaling — an N-devices x engine x phase sweep.
 
 Validation targets: (a) only marginal client-side degradation with more
-devices (the paper's claim), and (b) the vectorized engine's fused round
-beats the sequential loop engine's O(N) host dispatch wall-clock as N grows
-(the roadmap's scalability claim; asserted at N=16 by the acceptance
-criteria).  Per (n, engine) cell we time ``timing_rounds`` rounds with
-evaluation disabled (compile round reported separately), then run one
-evaluated round for the paper metrics.
+devices (the paper's claim), (b) the vectorized engine's fused round beats
+the sequential loop engine's O(N) host dispatch wall-clock as N grows, and
+(c) the vectorized *evaluation* — one jitted scan-over-vmap for all N
+clients plus a jitted scan for the N-independent server eval — beats the
+loop engine's per-batch host loop (strictly faster at N=64; the PR 2
+acceptance criterion).  Per (n, engine) cell we time ``timing_rounds``
+rounds split into train / eval / server phases (compile round reported
+separately), then run one evaluated round for the paper metrics.  The JSON
+written to experiments/results carries the per-phase timings plus
+``speedup`` (train) and ``eval_speedup`` rows per N.
 
-  PYTHONPATH=src python benchmarks/table2_scalability.py --engine both
+  PYTHONPATH=src python -m benchmarks.table2_scalability --engine both
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import (make_runner, save_result, time_rounds,
+from benchmarks.common import (make_runner, save_result, time_phases,
                                vast_corpus)
 
 ENGINES = ("loop", "vectorized")
 
 
+def _corpus_for(n_devices: int):
+    """Grow the synthetic corpus with N so every device's private shard
+    still yields full train batches (drop-last) and >=1 eval row."""
+    return vast_corpus(n=max(768, 16 * n_devices))
+
+
 def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3):
-    counts = [4, 16] if fast else [4, 16, 64]
+    counts = [4, 16] if fast else [4, 16, 64, 256]
     engines = ENGINES if engine == "both" else (engine,)
-    corpus = vast_corpus(n=768)
     table = {}
     for n in counts:
+        corpus = _corpus_for(n)
         entry = {}
         for eng in engines:
             runner = make_runner("ml-ecs", corpus, rho=0.8, rounds=2,
                                  n_devices=n, engine=eng)
-            timing = time_rounds(runner, timing_rounds)
+            timing = time_phases(runner, timing_rounds)
             summ = runner.run_round(evaluate=True)["summary"]
             entry[eng] = {"summary": summ, **timing}
-            print(f"table2 devices={n:2d} engine={eng:10s} "
-                  f"round={timing['mean_round_s']:.3f}s "
+            print(f"table2 devices={n:3d} engine={eng:10s} "
+                  f"train={timing['mean_train_s']:.3f}s "
+                  f"eval={timing['mean_eval_s']:.3f}s "
+                  f"server={timing['mean_server_eval_s']:.3f}s "
                   f"(compile {timing['compile_s']:.1f}s) "
                   f"avg_acc={summ['avg_acc']:.3f} "
                   f"server={summ['server_acc']:.3f}")
         if len(entry) == 2:
-            entry["speedup"] = (entry["loop"]["mean_round_s"]
-                                / max(entry["vectorized"]["mean_round_s"],
+            entry["speedup"] = (entry["loop"]["mean_train_s"]
+                                / max(entry["vectorized"]["mean_train_s"],
                                       1e-9))
-            print(f"table2 devices={n:2d} vectorized speedup "
-                  f"{entry['speedup']:.2f}x")
+            entry["eval_speedup"] = (
+                entry["loop"]["mean_eval_s"]
+                / max(entry["vectorized"]["mean_eval_s"], 1e-9))
+            print(f"table2 devices={n:3d} vectorized speedup "
+                  f"train {entry['speedup']:.2f}x "
+                  f"eval {entry['eval_speedup']:.2f}x")
         table[f"n{n}"] = entry
     save_result("table2_scalability", table)
     return table
@@ -57,9 +73,13 @@ def rows_csv(table):
                 continue
             s = v[eng]["summary"]
             rows.append(f"table2/{k}/{eng},{s['avg_acc']:.4f},"
-                        f"round_s={v[eng]['mean_round_s']:.4f}")
+                        f"train_s={v[eng]['mean_train_s']:.4f},"
+                        f"eval_s={v[eng]['mean_eval_s']:.4f}")
         if "speedup" in v:
             rows.append(f"table2/{k}/speedup,{v['speedup']:.2f},x")
+        if "eval_speedup" in v:
+            rows.append(f"table2/{k}/eval_speedup,"
+                        f"{v['eval_speedup']:.2f},x")
     return rows
 
 
@@ -68,7 +88,7 @@ if __name__ == "__main__":
     ap.add_argument("--engine", choices=("loop", "vectorized", "both"),
                     default="both")
     ap.add_argument("--fast", action="store_true",
-                    help="N in {4,16} instead of {4,16,64}")
+                    help="N in {4,16} instead of {4,16,64,256}")
     ap.add_argument("--timing-rounds", type=int, default=3)
     args = ap.parse_args()
     run(fast=args.fast, engine=args.engine,

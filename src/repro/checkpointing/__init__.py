@@ -1,2 +1,3 @@
+"""Checkpointing: pytree save/load + step-indexed CheckpointManager."""
 from repro.checkpointing.checkpoint import (load_pytree, save_pytree,
                                             latest_step, CheckpointManager)

@@ -1,2 +1,3 @@
+"""Architecture registry: ModelConfig plus the assigned (arch x shape) ids."""
 from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, InputShape,
                                 ModelConfig, get_config)

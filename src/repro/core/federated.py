@@ -30,6 +30,17 @@ Two interchangeable engines drive a round:
   (``NamedSharding``) so N clients parallelize across chips; on the
   single-device host mesh the placement is a no-op and results are exact.
 
+Evaluation follows the same two-engine contract.  Both engines share ONE
+metric definition (:func:`repro.core.seccl.make_eval_step`: masked token CE
++ template accuracy, padding rows weighted exactly zero).  The loop engine
+drives the jitted per-batch step from a host loop over
+:func:`repro.data.pipeline.eval_batches` — the reference.  The vectorized
+engine precomputes padded device-stacked eval shards
+(:func:`repro.data.pipeline.stacked_eval_batches`, constant across rounds)
+and computes all N client metrics in one jitted scan-over-``vmap`` call,
+plus the N-independent SE-CCL server evaluation as one jitted scan, so
+neither eval phase pays O(N) (or O(batches)) dispatch.
+
 Ablation switches (use_mma / use_seccl / use_ccl) give the paper's Fig. 4
 variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
 """
@@ -44,10 +55,11 @@ import numpy as np
 
 from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
-from repro.core.connector import connector_prefix
 from repro.data.multimodal import mer_partition, paper_split, train_test_split
 from repro.data.pipeline import (batches, eval_batches, np_batches,
-                                 stack_steps, stacked_batches)
+                                 np_eval_batches, stack_eval_steps,
+                                 stack_steps, stacked_batches,
+                                 stacked_eval_batches)
 from repro.models.model import ModelBundle, build_model
 from repro.optim.adamw import adamw, apply_updates
 from repro.sharding import partition as shard_part
@@ -56,6 +68,15 @@ from repro.sharding.rules import TRAIN_RULES
 
 @dataclasses.dataclass
 class FederatedConfig:
+    """Hyperparameters of one federated simulation.
+
+    ``engine`` picks the round implementation ("vectorized" fused-jit
+    default, "loop" sequential reference); the ablation flags (``use_mma``,
+    ``use_seccl``, ``use_ccl``) and ``mode`` select the paper's Fig. 4 /
+    baseline variants.  ``rho`` is the MER modality-existing rate drawn per
+    device; ``kt_weight`` scales the SE-CCL bidirectional KT terms.
+    """
+
     n_devices: int = 3
     rounds: int = 5
     local_steps_ccl: int = 4
@@ -152,6 +173,15 @@ class FederatedRunner:
             self._server_np_iter = np_batches(self.public_train, bs,
                                               cfg.seed + 999)
             self._round_fn = self._make_vectorized_round()
+            # evaluation: the test sets normally never change, so the
+            # padded device-stacked eval shards (and the server's
+            # public-test stack) are built once and reused every round —
+            # call refresh_eval_shards() after mutating priv_test /
+            # public_test
+            self._client_eval_fn = seccl.make_eval_fn(
+                self.slm, n_clients=cfg.n_devices)
+            self._server_eval_fn = seccl.make_eval_fn(self.llm)
+            self.refresh_eval_shards()
             if mesh is not None:
                 self._place_on_mesh(mesh)
         else:
@@ -176,6 +206,12 @@ class FederatedRunner:
                 batches(self.priv_train[j], bs, cfg.seed + 200 + j,
                         self.masks[j])
                 for j in range(cfg.n_devices)]
+            # reference evaluation: host loop over per-batch jitted steps
+            # sharing the vectorized engine's exact metric definition
+            self._eval_steps_jit = {
+                "slm": jax.jit(seccl.make_eval_step(self.slm)),
+                "llm": jax.jit(seccl.make_eval_step(self.llm)),
+            }
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------
@@ -189,6 +225,8 @@ class FederatedRunner:
 
     @property
     def device_opt(self) -> List:
+        """Per-device optimizer states (unstacked view under the vectorized
+        engine)."""
         if self.engine == "vectorized":
             return lora.unstack_tree(self.stacked_opt, self.cfg.n_devices)
         return self._device_opt
@@ -213,6 +251,8 @@ class FederatedRunner:
         self.server_slm_opt = repl(self.server_slm_opt)
         self.last_global = repl(self.last_global)
         self._agg_weights = repl(self._agg_weights)
+        # eval shards are placed by refresh_eval_shards (device axis 1 of
+        # the (T, N, B, ...) client stacks, server stack replicated)
 
     # ------------------------------------------------------------------
     def _make_seccl_step(self):
@@ -346,11 +386,23 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def run_round(self, evaluate: bool = True) -> Dict:
-        """One communication round.  Client-side metrics are measured on the
-        post-AMT device models (the model a device actually serves between
-        rounds); server metrics after SE-CCL.  Redistribution (Alg. 1 step 5)
-        seeds the NEXT round's devices.  ``evaluate=False`` skips metric
-        computation (benchmark timing of the engines themselves)."""
+        """One communication round.
+
+        With ``evaluate=True`` (default) returns the full metrics dict
+        (``client`` per-device list, ``server``, ``summary``): client-side
+        metrics are measured on the *post-AMT* device models (the model a
+        device actually serves between rounds, before redistribution);
+        server metrics after SE-CCL.  Redistribution (Alg. 1 step 5) seeds
+        the NEXT round's devices.
+
+        ``evaluate=False`` skips ALL metric computation and returns ``{}``
+        — the round's training state still advances identically, but no
+        eval forward passes run and nothing syncs to the host, so
+        benchmarks can time the engines themselves (pair with
+        :meth:`sync`).  Call :meth:`evaluate_clients` /
+        :meth:`evaluate_server` / :meth:`evaluate` afterwards to measure
+        the eval phases separately.
+        """
         if self.engine == "vectorized":
             return self._run_round_vectorized(evaluate)
         return self._run_round_loop(evaluate)
@@ -389,11 +441,9 @@ class FederatedRunner:
 
         if not evaluate:
             return {}
-        client_eval = [
-            self._eval_model(lora.gather_tree_device(post_amt, j), self.slm,
-                             self.priv_test[j], self.masks[j])
-            for j in range(cfg.n_devices)]
-        return self._finalize_eval(client_eval)
+        # all N client evals in one jitted scan-over-vmap call
+        return self._finalize_eval(
+            self._evaluate_clients(stacked_params=post_amt))
 
     # ------------------------------------------------------------------
     def _run_round_loop(self, evaluate: bool = True) -> Dict:
@@ -470,21 +520,81 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def run(self) -> List[Dict]:
+        """Run ``cfg.rounds`` evaluated rounds, appending to ``history``."""
         for _ in range(self.cfg.rounds):
             self.history.append(self.run_round())
         return self.history
 
     # ------------------------------------------------------------------
-    def _evaluate_clients(self):
-        dev = self.device_params
-        return [self._eval_model(dev[j], self.slm,
+    # evaluation — one metric definition (seccl.make_eval_step) under both
+    # engines; see the module docstring for the engine contract
+
+    def _evaluate_clients(self, stacked_params=None) -> List[Dict]:
+        """Per-device test metrics on the current (or given stacked) device
+        models.  Vectorized: one jitted scan-over-vmap over the padded eval
+        shards; loop: reference host loop, one device at a time."""
+        if self.engine == "vectorized":
+            sp = (stacked_params if stacked_params is not None
+                  else self.stacked_params)
+            sums = self._client_eval_fn(sp, self._client_eval_steps)
+            host = {k: np.asarray(v) for k, v in sums.items()}
+            return [seccl.metrics_from_sums(
+                        {k: host[k][j] for k in host})
+                    for j in range(self.cfg.n_devices)]
+        return [self._eval_model(self._device_params[j], self.slm,
                                  self.priv_test[j], self.masks[j])
                 for j in range(self.cfg.n_devices)]
 
-    def _finalize_eval(self, client_eval=None) -> Dict:
-        out = {"client": client_eval or self._evaluate_clients(),
-               "server": self._eval_model(self.server_llm, self.llm,
-                                          self.public_test, None)}
+    def _eval_server(self) -> Dict:
+        """Server (cloud LLM) metrics on the public test set — the SE-CCL
+        evaluation.  N-independent; the vectorized engine runs it as one
+        jitted scan so it cannot dominate small-N rounds."""
+        if self.engine == "vectorized":
+            return seccl.metrics_from_sums(self._server_eval_fn(
+                self.server_llm, self._server_eval_steps))
+        return self._eval_model(self.server_llm, self.llm,
+                                self.public_test, None)
+
+    def refresh_eval_shards(self) -> None:
+        """(Re)build the vectorized engine's precomputed eval stacks from
+        the CURRENT ``priv_test`` / ``public_test``.  The shards are
+        snapshotted for reuse across rounds, so after mutating a test set
+        call this — otherwise the vectorized engine would keep evaluating
+        the stale snapshot while the loop engine (which reads the
+        attributes live) sees the new data.  No-op on the loop engine."""
+        if self.engine != "vectorized":
+            return
+        bs = self.cfg.batch_size
+        self._client_eval_steps = stack_eval_steps(
+            stacked_eval_batches(self.priv_test, bs, self.masks))
+        self._server_eval_steps = stack_eval_steps(
+            np_eval_batches(self.public_test, bs))
+        if self.mesh is not None:
+            self._client_eval_steps = jax.device_put(
+                self._client_eval_steps, shard_part.stacked_eval_shardings(
+                    self._client_eval_steps, self.mesh, TRAIN_RULES))
+            self._server_eval_steps = jax.device_put(
+                self._server_eval_steps, shard_part.replicated_shardings(
+                    self._server_eval_steps, self.mesh))
+
+    def evaluate_clients(self) -> List[Dict]:
+        """Public API: per-device ``{"ce", "acc"}`` on each private test
+        set, using the engine's native eval path."""
+        return self._evaluate_clients()
+
+    def evaluate_server(self) -> Dict:
+        """Public API: server ``{"ce", "acc"}`` on the public test set."""
+        return self._eval_server()
+
+    def _finalize_eval(self, client_eval: Optional[List[Dict]] = None
+                       ) -> Dict:
+        """Assemble the round metrics dict from per-client metrics (computed
+        here if not supplied) plus the server eval and the summary row.
+        This is the ONLY place eval results are aggregated — ``run_round``
+        and :meth:`evaluate` share it, so the engines cannot drift."""
+        out = {"client": (client_eval if client_eval is not None
+                          else self._evaluate_clients()),
+               "server": self._eval_server()}
         cs = out["client"]
         out["summary"] = {
             "avg_acc": float(np.mean([c["acc"] for c in cs])),
@@ -497,50 +607,23 @@ class FederatedRunner:
         return out
 
     def evaluate(self) -> Dict:
-        """Test CE + template accuracy (macro-F1 for the classification
-        analogue) per device and for the server unified model."""
-        dev = self.device_params
-        out = {"client": [], "server": {}}
-        for j in range(self.cfg.n_devices):
-            out["client"].append(self._eval_model(
-                dev[j], self.slm, self.priv_test[j], self.masks[j]))
-        out["server"] = self._eval_model(
-            self.server_llm, self.llm, self.public_test, None)
-        cs = out["client"]
-        out["summary"] = {
-            "avg_acc": float(np.mean([c["acc"] for c in cs])),
-            "best_acc": float(np.max([c["acc"] for c in cs])),
-            "worst_acc": float(np.min([c["acc"] for c in cs])),
-            "avg_ce": float(np.mean([c["ce"] for c in cs])),
-            "server_acc": out["server"]["acc"],
-            "server_ce": out["server"]["ce"],
-        }
-        return out
+        """Test CE + template accuracy per device and for the server
+        unified model, on the CURRENT parameters (between rounds this is
+        post-redistribution, unlike ``run_round``'s post-AMT client
+        metrics).  Same code path as ``run_round``'s metrics
+        (:meth:`_finalize_eval`)."""
+        return self._finalize_eval()
 
     def _eval_model(self, params, bundle: ModelBundle, data, mask) -> Dict:
-        ces, hits, total = [], 0, 0
-        bs = self.cfg.batch_size
-        n = data["tokens"].shape[0]
-        seen = 0
-        for batch in eval_batches(data, bs, mask):
-            soft, _, _ = connector_prefix(
-                params["connector"], bundle.cfg,
-                batch["modality_feats"], batch["modality_mask"])
-            loss, metrics = bundle.lm_loss(
-                params, dict(batch, prefix_embeds=soft))
-            ces.append(float(metrics["ce"]))
-            # template accuracy: argmax over the masked region
-            logits, _ = bundle.logits(params, dict(batch, prefix_embeds=soft))
-            P = logits.shape[1] - batch["tokens"].shape[1]
-            S = batch["tokens"].shape[1]
-            pred = jnp.argmax(logits[:, P:P + S - 1], axis=-1)
-            tgt = batch["tokens"][:, 1:]
-            m = batch["loss_mask"][:, 1:] > 0
-            valid = min(bs, n - seen)
-            m = m[:valid]
-            hits += int(jnp.sum((pred[:valid] == tgt[:valid]) & m))
-            total += int(jnp.sum(m))
-            seen += valid
-            if seen >= n:
-                break
-        return {"ce": float(np.mean(ces)), "acc": hits / max(total, 1)}
+        """Reference evaluation of one model: host loop over padded
+        ``eval_batches``, accumulating the jitted per-batch masked sums
+        (``seccl.make_eval_step``) in f32 — the same sequential addition
+        order as the vectorized engine's scan, so the engines agree to
+        float rounding."""
+        step = self._eval_steps_jit["slm" if bundle is self.slm else "llm"]
+        sums = {k: np.float32(0.0) for k in seccl.EVAL_SUM_KEYS}
+        for batch in eval_batches(data, self.cfg.batch_size, mask):
+            out = jax.device_get(step(params, batch))
+            for k in sums:
+                sums[k] = np.float32(sums[k] + out[k])
+        return seccl.metrics_from_sums(sums)

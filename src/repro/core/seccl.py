@@ -9,13 +9,25 @@ mismatch (average-pool to S = min(S1, S2)) and sparse-output "divergence
 singularities" (temperature-smoothed f32 softmax).  Vocab mismatch between
 heterogeneous backbones is handled by average-pooling the vocab axis to the
 smaller vocabulary (the Co-PLMs-style structure-agnostic bridge).
+
+This module also owns the *jitted evaluation* of a unified model
+(:func:`make_eval_step` / :func:`make_eval_fn`): one forward per batch
+producing masked metric sums (token CE, template-accuracy hits, weight).
+Both federated engines share this single metric definition — the loop
+engine drives the per-batch step from a host loop (the reference), while
+the vectorized engine scans it (server eval) or scans a ``vmap`` of it over
+the stacked client axis (all-clients eval) inside one jitted call, so the
+N-independent server phase and the O(N) client phase stop paying per-batch
+dispatch.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.connector import connector_prefix
 
 
 def _pool_axis(x, target: int, axis: int):
@@ -54,3 +66,98 @@ def kt_loss(y_student, y_teacher, temperature: float = 2.0):
     """KT with stop-gradient on the teacher side (each model's loss treats
     the other as fixed within the step, per Eq. 15/16)."""
     return pooled_kl(y_student, jax.lax.stop_gradient(y_teacher), temperature)
+
+
+# ---------------------------------------------------------------------------
+# jitted evaluation (test CE + template accuracy) of a unified model
+
+EVAL_SUM_KEYS = ("ce_sum", "hits", "weight")
+
+
+def make_eval_step(bundle):
+    """Per-batch evaluation sums for a unified model, in ONE forward pass.
+
+    The returned ``step(params, batch) -> {ce_sum, hits, weight}`` expects
+    an eval batch from :func:`repro.data.pipeline.eval_batches` (or one
+    ``(B, ...)`` slice of a stacked shard): ``row_valid`` weights each row,
+    so padding rows contribute *exactly zero* to every sum.  All sums are
+    f32 scalars:
+
+    * ``ce_sum``  — sum over valid rows/positions of token NLL,
+    * ``hits``    — argmax-prediction matches over the same positions,
+    * ``weight``  — count of valid loss positions (the shared denominator).
+
+    Finalize with :func:`metrics_from_sums`.  The step is pure and
+    jit/vmap/scan-friendly; callers choose the wrapper (the loop engine jits
+    it directly, the vectorized engine scans a ``vmap`` of it).
+    """
+    cfg = bundle.cfg
+
+    def step(params, batch: Dict) -> Dict[str, jnp.ndarray]:
+        b = dict(batch)
+        row_valid = b.pop("row_valid", None)
+        if cfg.n_modalities > 0 and "modality_feats" in b:
+            soft, _, _ = connector_prefix(
+                params["connector"], cfg,
+                b["modality_feats"], b["modality_mask"])
+            b["prefix_embeds"] = soft
+        logits, _ = bundle.logits(params, b)
+        tokens = b["tokens"]
+        S = tokens.shape[1]
+        P = logits.shape[1] - S           # soft-prompt prefix length
+        pred_logits = logits[:, P:P + S - 1].astype(jnp.float32)
+        targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(pred_logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        w = b["loss_mask"][:, 1:].astype(jnp.float32)
+        if row_valid is not None:
+            w = w * row_valid.astype(jnp.float32)[:, None]
+        hit = (jnp.argmax(pred_logits, axis=-1) == targets)
+        return {"ce_sum": jnp.sum(nll * w),
+                "hits": jnp.sum(hit.astype(jnp.float32) * w),
+                "weight": jnp.sum(w)}
+
+    return step
+
+
+def make_eval_fn(bundle, n_clients: Optional[int] = None):
+    """Whole-eval-pass function: jitted ``lax.scan`` of the per-batch step.
+
+    With ``n_clients=None`` the returned ``run(params, steps)`` evaluates a
+    single model over ``(T, B, ...)`` stacked eval steps (the SE-CCL server
+    evaluation — N-independent, so jitting it keeps the server phase from
+    dominating small-N rounds) and returns scalar sums.  With
+    ``n_clients=N`` the per-batch step is ``vmap``-ed over the leading
+    client axis: ``params`` pytrees carry ``(N, ...)`` leaves, ``steps``
+    leaves are ``(T, N, B, ...)`` (from
+    :func:`repro.data.pipeline.stacked_eval_batches` via
+    :func:`repro.data.pipeline.stack_eval_steps`), and the sums are
+    ``(N,)`` vectors — all N client evals in one fused call.
+    """
+    step = make_eval_step(bundle)
+    if n_clients is None:
+        body_step = step
+        init = {k: jnp.zeros((), jnp.float32) for k in EVAL_SUM_KEYS}
+    else:
+        body_step = jax.vmap(step)
+        init = {k: jnp.zeros((n_clients,), jnp.float32)
+                for k in EVAL_SUM_KEYS}
+
+    def run(params, steps: Dict) -> Dict[str, jnp.ndarray]:
+        def body(carry, batch):
+            # keep the per-batch addition order of the host loop: metric
+            # sums accumulate step-by-step, never reassociated
+            return jax.tree.map(jnp.add, carry, body_step(params, batch)), \
+                None
+        sums, _ = jax.lax.scan(body, init, steps)
+        return sums
+
+    return jax.jit(run)
+
+
+def metrics_from_sums(sums: Dict) -> Dict[str, float]:
+    """Finalize one model's masked eval sums into the reported metrics:
+    ``ce`` (mean token NLL over valid positions) and ``acc`` (template
+    accuracy over the same positions)."""
+    w = max(float(sums["weight"]), 1.0)
+    return {"ce": float(sums["ce_sum"]) / w, "acc": float(sums["hits"]) / w}

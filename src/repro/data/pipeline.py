@@ -1,15 +1,27 @@
 """Batching: numpy -> jnp device batches with per-device modality masks.
 
-Two shapes of iterator:
+Three shapes of iterator:
 
-* :func:`batches` / :func:`eval_batches` — per-device ``(B, ...)`` batches,
-  used by the sequential ("loop") federated engine and evaluation;
-* :func:`stacked_batches` — device-stacked ``(N, B, ...)`` batches for the
-  vectorized engine.  Each device keeps its *own* shuffle stream (same seed
-  schedule as N independent :func:`batches` iterators), so the two engines
+* :func:`batches` / :func:`np_batches` — infinite shuffled per-device
+  ``(B, ...)`` train batches, used by the sequential ("loop") federated
+  engine and the SPMD trainer;
+* :func:`eval_batches` / :func:`np_eval_batches` — *finite*, in-order
+  ``(B, ...)`` eval batches.  The last batch is padded up to ``B`` (static
+  shapes for jit) and every batch carries a ``row_valid`` ``(B,)`` mask so
+  padding rows contribute exactly zero to metric sums;
+* :func:`stacked_batches` / :func:`stacked_eval_batches` — device-stacked
+  ``(N, B, ...)`` batches for the vectorized engine.  Each device keeps its
+  *own* shuffle stream (train) or in-order shard (eval), bit-identical to N
+  independent per-device iterators, so the loop and vectorized engines
   consume identical data and stay numerically comparable.
 
-Both share :func:`_index_stream` for the shuffle order.
+:func:`stack_steps` (infinite train iterators) and
+:func:`stack_eval_steps` (finite eval iterators) add a leading step axis so
+a whole round phase transfers host->device once and runs under one
+``lax.scan``.
+
+Train iterators share :func:`_index_stream` for the shuffle order; eval
+iterators share :func:`_eval_index_blocks` for the padded in-order blocks.
 """
 from __future__ import annotations
 
@@ -95,21 +107,103 @@ def stacked_batches(datas: Sequence[Dict[str, np.ndarray]], batch_size: int,
         yield {k: np.stack([b[k] for b in per_dev]) for k in per_dev[0]}
 
 
+def _stack_on_device(steps: List[Dict[str, np.ndarray]]
+                     ) -> Dict[str, jnp.ndarray]:
+    """Stack host batches on a new leading step axis and transfer once."""
+    return {key: jnp.asarray(np.stack([s[key] for s in steps]))
+            for key in steps[0]}
+
+
 def stack_steps(it: Iterator[Dict[str, np.ndarray]], k: int
                 ) -> Dict[str, jnp.ndarray]:
     """Pull ``k`` batches and stack them on a new leading step axis —
     one host->device transfer per round phase instead of one per step."""
-    steps = [next(it) for _ in range(k)]
-    return {key: jnp.asarray(np.stack([s[key] for s in steps]))
-            for key in steps[0]}
+    return _stack_on_device([next(it) for _ in range(k)])
+
+
+# ---------------------------------------------------------------------------
+# evaluation: finite, in-order, padded to static shapes with row validity
+
+
+def _eval_index_blocks(n: int, batch_size: int, n_blocks: Optional[int] = None):
+    """In-order index blocks of exactly ``batch_size`` rows with a validity
+    mask per row.
+
+    Blocks past ``ceil(n / batch_size)`` (when a larger ``n_blocks`` is
+    forced, e.g. to align devices with differently-sized eval sets) repeat
+    row ``n - 1`` with an all-zero mask; a partial final block is padded the
+    same way.  Yields ``(idx, row_valid)`` numpy pairs.
+    """
+    total = -(-n // batch_size) if n_blocks is None else n_blocks
+    for i in range(total):
+        start = i * batch_size
+        idx = np.arange(start, min(start + batch_size, n))
+        valid = np.ones(len(idx), np.float32)
+        if len(idx) < batch_size:       # pad to keep shapes static
+            pad = batch_size - len(idx)
+            fill = idx[-1] if len(idx) else n - 1
+            idx = np.concatenate([idx, np.full(pad, fill, idx.dtype
+                                               if len(idx) else np.int64)])
+            valid = np.concatenate([valid, np.zeros(pad, np.float32)])
+        yield idx, valid
+
+
+def np_eval_batches(data: Dict[str, np.ndarray], batch_size: int,
+                    modality_mask: Optional[np.ndarray] = None,
+                    n_blocks: Optional[int] = None
+                    ) -> Iterator[Dict[str, np.ndarray]]:
+    """Finite in-order eval iterator with numpy leaves.
+
+    Every batch has exactly ``batch_size`` rows (static shapes for jit) plus
+    a ``row_valid`` ``(B,)`` float mask: 1.0 for real rows, 0.0 for the
+    padding rows of the tail batch.  Metric code multiplies by ``row_valid``
+    so padding contributes exactly zero to evaluation sums/means.
+    """
+    n = data["tokens"].shape[0]
+    for idx, valid in _eval_index_blocks(n, batch_size, n_blocks):
+        b = _gather_np(data, idx, modality_mask)
+        b["row_valid"] = valid
+        yield b
 
 
 def eval_batches(data: Dict[str, np.ndarray], batch_size: int,
                  modality_mask: Optional[np.ndarray] = None
                  ) -> Iterator[Dict[str, jnp.ndarray]]:
-    n = data["tokens"].shape[0]
-    for i in range(0, n, batch_size):
-        idx = np.arange(i, min(i + batch_size, n))
-        if len(idx) < batch_size:      # pad to keep shapes static
-            idx = np.concatenate([idx, np.full(batch_size - len(idx), idx[-1])])
-        yield _to_batch(data, idx, modality_mask)
+    """Device-array twin of :func:`np_eval_batches` — the loop engine's
+    (reference) evaluation stream."""
+    for b in np_eval_batches(data, batch_size, modality_mask):
+        yield {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def stacked_eval_batches(datas: Sequence[Dict[str, np.ndarray]],
+                         batch_size: int,
+                         masks: Optional[np.ndarray] = None
+                         ) -> Iterator[Dict[str, np.ndarray]]:
+    """Device-stacked eval shards: finite, numpy leaves of ``(N, B, ...)``.
+
+    The eval mirror of :func:`stacked_batches`.  Devices may have
+    differently-sized eval sets; every device is padded to the *largest*
+    device's block count, and ``row_valid`` ``(N, B)`` zeroes both tail
+    padding and whole past-the-end blocks, so device j's masked metric sums
+    equal ``eval_batches(datas[j], batch_size, masks[j])`` exactly.
+    """
+    n_dev = len(datas)
+    sizes = [d["tokens"].shape[0] for d in datas]
+    n_blocks = max(-(-n // batch_size) for n in sizes)
+    iters = [np_eval_batches(datas[j], batch_size,
+                             None if masks is None else masks[j],
+                             n_blocks=n_blocks)
+             for j in range(n_dev)]
+    for per_dev in zip(*iters):
+        yield {k: np.stack([b[k] for b in per_dev]) for k in per_dev[0]}
+
+
+def stack_eval_steps(it: Iterator[Dict[str, np.ndarray]]
+                     ) -> Dict[str, jnp.ndarray]:
+    """Exhaust a *finite* eval iterator and stack it on a leading step axis:
+    one host->device transfer for the whole eval pass, shaped for
+    ``lax.scan`` (``(T, B, ...)`` per-device or ``(T, N, B, ...)`` stacked).
+    """
+    steps = list(it)
+    assert steps, "empty eval iterator"
+    return _stack_on_device(steps)

@@ -1,8 +1,10 @@
-# Pallas TPU kernels for the framework's compute hot spots, each validated
-# in interpret mode against the pure-jnp oracles in ref.py:
-#   gram_volume     — the CCL loss inner loop (paper Eq. 5-6)
-#   lora_matmul     — fused W@x + (alpha/r) * B(A@x) (paper Eq. 1)
-#   flash_attention — blockwise online-softmax attention (+sliding window)
-#   ssd_scan        — Mamba2 SSD intra-chunk term
-# Public jit'd wrappers live in ops.py.
+"""Pallas TPU kernels for the framework's compute hot spots, each validated
+in interpret mode against the pure-jnp oracles in ref.py:
+
+  gram_volume     — the CCL loss inner loop (paper Eq. 5-6)
+  lora_matmul     — fused W@x + (alpha/r) * B(A@x) (paper Eq. 1)
+  flash_attention — blockwise online-softmax attention (+sliding window)
+  ssd_scan        — Mamba2 SSD intra-chunk term
+
+Public jit'd wrappers live in ops.py."""
 from repro.kernels import ops, ref

@@ -1,12 +1,10 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production mesh, extract memory/cost analysis and the collective
 schedule, and derive the three roofline terms.
 
 This file MUST set XLA_FLAGS before any jax import (device count locks on
-first init) — hence the module docstring below the os.environ lines.
+first init) — hence the os.environ lines directly below this docstring,
+ahead of every other import.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
@@ -14,6 +12,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch ... --full-finetune
 Outputs one JSON per combo under experiments/dryrun/.
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse     # noqa: E402
 import json         # noqa: E402
 import re           # noqa: E402

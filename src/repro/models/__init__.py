@@ -1,1 +1,2 @@
+"""Model families behind the unified ModelBundle factory."""
 from repro.models.model import build_model, ModelBundle

@@ -1,2 +1,3 @@
+"""Optimizers (AdamW/SGD over flat trainable dicts) and LR schedules."""
 from repro.optim.adamw import Optimizer, adamw, sgd
 from repro.optim.schedule import constant, cosine_warmup

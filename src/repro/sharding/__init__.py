@@ -1,3 +1,4 @@
+"""SPMD sharding: logical-axis rules and mesh partitioning helpers."""
 from repro.sharding.rules import Rules, TRAIN_RULES, DECODE_RULES, rules_for
 from repro.sharding.partition import (
     constrain, sharding_context, param_pspecs, tree_shardings,

@@ -136,6 +136,15 @@ def stacked_client_shardings(tree, mesh: Mesh, rules: Rules, axis: int = 0):
     return jax.tree.map(f, tree)
 
 
+def stacked_eval_shardings(tree, mesh: Mesh, rules: Rules):
+    """NamedShardings for the precomputed eval stacks of the vectorized
+    engine: ``(T, N, B, ...)`` leaves (steps, clients, batch) place the
+    client dim (axis 1) on the "device" logical axis, exactly like the
+    training stacks — eval shards on the data mesh the same way training
+    does.  Leaves of lower rank (none today) replicate via sanitation."""
+    return stacked_client_shardings(tree, mesh, rules, axis=1)
+
+
 def replicated_shardings(tree, mesh: Mesh):
     """Fully-replicated NamedShardings (server-side state on the client
     mesh)."""

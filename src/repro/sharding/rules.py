@@ -33,9 +33,10 @@ def _base(batch_axes: Axis, kv_seq: Axis = None) -> dict:
     return {
         # activations
         "batch": batch_axes,
-        # stacked federated clients: the leading N-devices axis of the
-        # vectorized engine's StackedClients / stacked batches parallelizes
-        # over the same chips as data parallelism
+        # stacked federated clients: the N-devices axis of the vectorized
+        # engine's StackedClients / stacked train batches / padded eval
+        # shards parallelizes over the same chips as data parallelism
+        # (leading axis of state pytrees, axis 1 of (T, N, B, ...) stacks)
         "device": batch_axes,
         "seq": None,
         "kv_seq": kv_seq,        # decode: KV cache sequence dim

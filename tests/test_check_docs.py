@@ -1,0 +1,40 @@
+"""The CI docs gate (tools/check_docs.py): README + module-docstring checks."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def _mini_repo(tmp_path, with_readme=True, docstring='"""doc."""\n'):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    if with_readme:
+        (tmp_path / "README.md").write_text("# hi\n")
+    (tmp_path / "src" / "repro" / "mod.py").write_text(docstring + "x = 1\n")
+    return tmp_path
+
+
+def test_clean_repo_passes(tmp_path):
+    assert check_docs.main(["check_docs", str(_mini_repo(tmp_path))]) == 0
+
+
+def test_missing_readme_fails(tmp_path):
+    repo = _mini_repo(tmp_path, with_readme=False)
+    assert check_docs.main(["check_docs", str(repo)]) == 1
+
+
+def test_missing_docstring_fails(tmp_path):
+    repo = _mini_repo(tmp_path, docstring="")
+    assert check_docs.main(["check_docs", str(repo)]) == 1
+    bad = check_docs.missing_docstrings(repo / "src" / "repro")
+    assert len(bad) == 1 and bad[0][0].name == "mod.py"
+
+
+def test_this_repo_is_clean():
+    """The actual gate CI runs — the repo must stay documented."""
+    out = subprocess.run([sys.executable, str(ROOT / "tools" / "check_docs.py"),
+                          str(ROOT)], capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr

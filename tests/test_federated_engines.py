@@ -1,15 +1,18 @@
-"""Loop vs. vectorized federated engines: numerical equivalence, plus unit
-tests for the device-stacked representations (StackedClients, stacked MMA,
-stacked batch iterator, client-axis sharding)."""
+"""Loop vs. vectorized federated engines: numerical equivalence (train AND
+eval), plus unit tests for the device-stacked representations
+(StackedClients, stacked MMA, stacked batch iterators, padded eval shards,
+client-axis sharding)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.core import lora, mma
+from repro.core import lora, mma, seccl
 from repro.core.federated import FederatedConfig, FederatedRunner
-from repro.data.pipeline import batches, stack_steps, stacked_batches
+from repro.data.pipeline import (batches, eval_batches, np_eval_batches,
+                                 stack_eval_steps, stack_steps,
+                                 stacked_batches, stacked_eval_batches)
 from repro.data.synthetic import synthetic_multimodal_corpus
 from repro.models.model import build_model
 
@@ -200,6 +203,95 @@ def test_stack_steps_shapes(corpus):
 
 
 # ---------------------------------------------------------------------------
+# padded eval shards: stream replay + masked padding rows
+
+def _subset(corpus, n):
+    rows = corpus["tokens"].shape[0]
+    return {k: (v[:n] if isinstance(v, np.ndarray) and v.shape[:1] == (rows,)
+                else v) for k, v in corpus.items()}
+
+
+def test_stacked_eval_batches_match_per_device_streams(corpus):
+    """Each device's sub-stream of the stacked eval shards (incl. row_valid
+    and past-the-end padding blocks) replays eval_batches exactly, even with
+    differently-sized eval sets."""
+    masks = np.array([[True, False, True], [True, True, False]])
+    datas = [_subset(corpus, 30), _subset(corpus, 13)]   # 4 vs 2 blocks @ 8
+    stacked = list(stacked_eval_batches(datas, 8, masks))
+    assert len(stacked) == 4                              # max block count
+    for j in range(2):
+        singles = list(eval_batches(datas[j], 8, masks[j]))
+        for i, sb in enumerate(stacked):
+            if i < len(singles):
+                for k in singles[i]:
+                    np.testing.assert_array_equal(
+                        np.asarray(sb[k][j]), np.asarray(singles[i][k]),
+                        err_msg=f"dev {j} step {i} key {k}")
+            else:   # past-the-end block: fully invalid
+                assert not sb["row_valid"][j].any()
+
+
+def test_eval_padding_rows_contribute_zero(corpus):
+    """A device whose eval set is smaller than the batch size: the padded
+    rows must contribute exactly zero to ce/acc in BOTH engines — metrics
+    equal an unpadded evaluation at batch_size == n."""
+    small = 5       # < batch_size of 8
+    for engine in ("loop", "vectorized"):
+        runner = _make_runner(corpus, engine, rounds=1)
+        runner.priv_test[-1] = _subset(corpus, small)
+        runner.refresh_eval_shards()   # rebuild the precomputed shards
+        got = runner.evaluate_clients()[-1]
+        # unpadded reference: one exact-size batch through the same metric
+        step = seccl.make_eval_step(runner.slm)
+        batch = next(iter(np_eval_batches(runner.priv_test[-1], small,
+                                          runner.masks[-1])))
+        assert float(batch["row_valid"].sum()) == small
+        want = seccl.metrics_from_sums(
+            step(runner.device_params[-1],
+                 {k: jnp.asarray(v) for k, v in batch.items()}))
+        assert got["ce"] == pytest.approx(want["ce"], abs=1e-5), engine
+        assert got["acc"] == pytest.approx(want["acc"], abs=1e-5), engine
+
+
+def test_engines_match_with_tiny_last_eval_set(corpus):
+    """Engine agreement when the last device's eval set is sub-batch-size
+    (forces padding + past-the-end blocks in the stacked shards)."""
+    runners = {}
+    for engine in ("loop", "vectorized"):
+        r = _make_runner(corpus, engine, rounds=1)
+        r.priv_test[-1] = _subset(corpus, 3)
+        r.refresh_eval_shards()
+        runners[engine] = r
+    _assert_summaries_match(runners["loop"].run_round()["summary"],
+                            runners["vectorized"].run_round()["summary"])
+
+
+def test_stack_eval_steps_shapes(corpus):
+    masks = np.ones((2, 3), bool)
+    out = stack_eval_steps(stacked_eval_batches(
+        [_subset(corpus, 20), _subset(corpus, 9)], 4, masks))
+    assert out["tokens"].shape[:3] == (5, 2, 4)      # (T, N, B)
+    assert out["row_valid"].shape == (5, 2, 4)
+    # device 1 has ceil(9/4)=3 real blocks; blocks 3..4 fully masked
+    rv = np.asarray(out["row_valid"])
+    assert rv[:, 0].sum() == 20 and rv[:, 1].sum() == 9
+    assert not rv[3:, 1].any()
+
+
+def test_evaluate_unified_code_path(corpus):
+    """FederatedRunner.evaluate() goes through _finalize_eval — same keys
+    and same engine-agreement contract as run_round's metrics."""
+    loop = _make_runner(corpus, "loop", rounds=1)
+    vec = _make_runner(corpus, "vectorized", rounds=1)
+    loop.run_round(evaluate=False)
+    vec.run_round(evaluate=False)
+    s_loop = loop.evaluate()
+    s_vec = vec.evaluate()
+    assert set(s_loop) == {"client", "server", "summary"}
+    _assert_summaries_match(s_loop["summary"], s_vec["summary"])
+
+
+# ---------------------------------------------------------------------------
 # client-axis sharding helpers (host mesh: degrade to replication, exact)
 
 def test_stacked_client_shardings_host_mesh():
@@ -215,3 +307,16 @@ def test_stacked_client_shardings_host_mesh():
     repl = replicated_shardings(tree, mesh)
     placed2 = jax.device_put(tree, repl)
     assert placed2["b"].shape == (4,)
+
+
+def test_stacked_eval_shardings_host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.partition import stacked_eval_shardings
+    from repro.sharding.rules import TRAIN_RULES
+    mesh = make_host_mesh()
+    steps = {"tokens": jnp.zeros((3, 4, 8, 16)),
+             "row_valid": jnp.zeros((3, 4, 8))}
+    placed = jax.device_put(
+        steps, stacked_eval_shardings(steps, mesh, TRAIN_RULES))
+    assert placed["tokens"].shape == (3, 4, 8, 16)
+    assert placed["row_valid"].shape == (3, 4, 8)

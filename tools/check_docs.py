@@ -1,0 +1,53 @@
+"""Docs gate for CI: README.md must exist and every module under
+``src/repro/**/*.py`` must carry a non-empty module docstring.
+
+Pure stdlib (ast), no repo imports — safe to run before dependencies are
+installed.  Exit status 0 when clean, 1 with a findings list otherwise.
+
+  python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+
+def missing_docstrings(src_root: pathlib.Path) -> list:
+    """Paths under ``src_root`` whose module docstring is absent/empty/
+    unparseable."""
+    bad = []
+    for path in sorted(src_root.rglob("*.py")):
+        try:
+            doc = ast.get_docstring(ast.parse(
+                path.read_text(encoding="utf-8")))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            bad.append((path, f"unparseable: {e}"))
+            continue
+        if not (doc and doc.strip()):
+            bad.append((path, "missing module docstring"))
+    return bad
+
+
+def main(argv) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    problems = []
+    if not (root / "README.md").is_file():
+        problems.append((root / "README.md", "README.md does not exist"))
+    src = root / "src" / "repro"
+    if not src.is_dir():
+        problems.append((src, "src/repro/ does not exist"))
+    else:
+        problems.extend(missing_docstrings(src))
+    for path, why in problems:
+        print(f"check_docs: {path.relative_to(root)}: {why}")
+    if problems:
+        print(f"check_docs: FAILED ({len(problems)} problem(s))")
+        return 1
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
