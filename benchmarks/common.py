@@ -60,7 +60,7 @@ METHOD_CONFIGS = {
 
 
 def make_runner(method: str, corpus, rho: float, rounds: int = 3,
-                n_devices: int = 3, seed: int = 0, **extra
+                n_devices: int = 3, seed: int = 0, mesh=None, **extra
                 ) -> FederatedRunner:
     overrides, rank = METHOD_CONFIGS[method]
     fc = FederatedConfig(n_devices=n_devices, rounds=rounds,
@@ -68,7 +68,7 @@ def make_runner(method: str, corpus, rho: float, rounds: int = 3,
                          server_steps=2, batch_size=8, lr=1e-2, rho=rho,
                          seed=seed, **{**overrides, **extra})
     return FederatedRunner(fc, build_model(slm_cfg(rank)),
-                           build_model(llm_cfg()), corpus)
+                           build_model(llm_cfg()), corpus, mesh=mesh)
 
 
 def run_method(method: str, corpus, rho: float, rounds: int = 3,
@@ -83,12 +83,21 @@ def time_phases(runner: FederatedRunner, n_rounds: int = 3) -> dict:
     """Per-phase wall-clock of a communication round: ``train`` (the fused
     or looped round itself, ``evaluate=False`` + sync), ``eval`` (all N
     client evals), and ``server`` (the N-independent SE-CCL public-test
-    eval).  The first full round incl. eval (jit compilation + warmup) is
-    reported as ``compile_s``; metric results sync to host floats, so each
-    phase timer measures completed work, not enqueue."""
+    eval).  The warmup rounds incl. eval (jit compilation) are reported as
+    ``compile_s``; metric results sync to host floats, so each phase timer
+    measures completed work, not enqueue.  For the overlap engine,
+    ``sync()`` blocks on the device critical path only — the pipelined
+    server phase is (by design) off it.  Warmup runs ``staleness + 2``
+    rounds: the first compiles the round function(s), the next cover the
+    recompiles triggered when input shardings change after round 1 / the
+    first redistribution (on a mesh the round-1 output placement differs
+    from the initial one) — without them a fresh XLA compile lands inside
+    the first TIMED round and poisons every mean."""
     with Timer() as t0:
-        runner.run_round(evaluate=False)
-        runner.sync()
+        for _ in range(2 + getattr(runner.cfg, "staleness", 0)):
+            runner.run_round(evaluate=False)
+            runner.sync()
+        runner.drain()
         runner.evaluate_clients()
         runner.evaluate_server()
     train, ev, srv = [], [], []

@@ -2,46 +2,77 @@
 
 Validation targets: (a) only marginal client-side degradation with more
 devices (the paper's claim), (b) the vectorized engine's fused round beats
-the sequential loop engine's O(N) host dispatch wall-clock as N grows, and
+the sequential loop engine's O(N) host dispatch wall-clock as N grows,
 (c) the vectorized *evaluation* — one jitted scan-over-vmap for all N
 clients plus a jitted scan for the N-independent server eval — beats the
-loop engine's per-batch host loop (strictly faster at N=64; the PR 2
-acceptance criterion).  Per (n, engine) cell we time ``timing_rounds``
-rounds split into train / eval / server phases (compile round reported
-separately), then run one evaluated round for the paper metrics.  The JSON
-written to experiments/results carries the per-phase timings plus
-``speedup`` (train) and ``eval_speedup`` rows per N.
+loop engine's per-batch host loop (the PR 2 criterion), and (d) the
+*overlap* engine with ``staleness=1`` beats the vectorized engine's
+per-round wall-clock by taking the SE-CCL server phase off the device
+critical path and double-buffering host batch assembly (the PR 4
+criterion, at N in {16, 64}).  Per (n, engine) cell we time
+``timing_rounds`` rounds split into train / eval / server phases (compile
+rounds reported separately), then run one evaluated round for the paper
+metrics.  The JSON written to experiments/results carries the per-phase
+timings plus ``speedup`` (loop->vectorized train), ``eval_speedup``
+(loop->vectorized eval) and ``overlap_speedup``
+(vectorized->overlap train) rows per N, and a ``meta`` record (device
+count, mesh, staleness).
 
-  PYTHONPATH=src python -m benchmarks.table2_scalability --engine both
+Run the PR 4 configuration (8 forced host devices so the overlap server
+chain gets a separate device and the client stack shards over the mesh —
+this exact command produced the committed JSON):
+
+  PYTHONPATH=src python -m benchmarks.table2_scalability \
+      --engine all --force-host-devices 8 --mesh --counts 4,16,64 \
+      --timing-rounds 7
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import (make_runner, save_result, time_phases,
-                               vast_corpus)
-
-ENGINES = ("loop", "vectorized")
+ENGINES = ("loop", "vectorized", "overlap")
 
 
 def _corpus_for(n_devices: int):
     """Grow the synthetic corpus with N so every device's private shard
     still yields full train batches (drop-last) and >=1 eval row."""
+    from benchmarks.common import vast_corpus
     return vast_corpus(n=max(768, 16 * n_devices))
 
 
-def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3):
-    counts = [4, 16] if fast else [4, 16, 64, 256]
-    engines = ENGINES if engine == "both" else (engine,)
-    table = {}
+def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3,
+        staleness: int = 1, mesh: bool = False, counts=None):
+    import jax
+
+    from benchmarks.common import make_runner, save_result, time_phases
+
+    if counts is None:
+        counts = [4, 16] if fast else [4, 16, 64, 256]
+    if engine == "both":
+        engines = ("loop", "vectorized")
+    elif engine == "all":
+        engines = ENGINES
+    else:
+        engines = (engine,)
+    mesh_obj = None
+    if mesh:
+        from repro.launch.mesh import make_federated_mesh
+        mesh_obj = make_federated_mesh()
+    table = {"meta": {"devices": jax.device_count(), "mesh": mesh,
+                      "staleness": staleness,
+                      "timing_rounds": timing_rounds}}
     for n in counts:
         corpus = _corpus_for(n)
         entry = {}
         for eng in engines:
-            runner = make_runner("ml-ecs", corpus, rho=0.8, rounds=2,
-                                 n_devices=n, engine=eng)
+            extra = {"staleness": staleness} if eng == "overlap" else {}
+            runner = make_runner(
+                "ml-ecs", corpus, rho=0.8, rounds=2, n_devices=n,
+                engine=eng, mesh=(mesh_obj if eng != "loop" else None),
+                **extra)
             timing = time_phases(runner, timing_rounds)
             summ = runner.run_round(evaluate=True)["summary"]
+            runner.close()
             entry[eng] = {"summary": summ, **timing}
             print(f"table2 devices={n:3d} engine={eng:10s} "
                   f"train={timing['mean_train_s']:.3f}s "
@@ -50,7 +81,7 @@ def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3):
                   f"(compile {timing['compile_s']:.1f}s) "
                   f"avg_acc={summ['avg_acc']:.3f} "
                   f"server={summ['server_acc']:.3f}")
-        if len(entry) == 2:
+        if "loop" in entry and "vectorized" in entry:
             entry["speedup"] = (entry["loop"]["mean_train_s"]
                                 / max(entry["vectorized"]["mean_train_s"],
                                       1e-9))
@@ -60,6 +91,12 @@ def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3):
             print(f"table2 devices={n:3d} vectorized speedup "
                   f"train {entry['speedup']:.2f}x "
                   f"eval {entry['eval_speedup']:.2f}x")
+        if "vectorized" in entry and "overlap" in entry:
+            entry["overlap_speedup"] = (
+                entry["vectorized"]["mean_train_s"]
+                / max(entry["overlap"]["mean_train_s"], 1e-9))
+            print(f"table2 devices={n:3d} overlap(staleness={staleness}) "
+                  f"speedup train {entry['overlap_speedup']:.2f}x")
         table[f"n{n}"] = entry
     save_result("table2_scalability", table)
     return table
@@ -68,6 +105,8 @@ def run(fast: bool = True, engine: str = "both", timing_rounds: int = 3):
 def rows_csv(table):
     rows = []
     for k, v in table.items():
+        if not k.startswith("n"):
+            continue
         for eng in ENGINES:
             if eng not in v:
                 continue
@@ -75,21 +114,36 @@ def rows_csv(table):
             rows.append(f"table2/{k}/{eng},{s['avg_acc']:.4f},"
                         f"train_s={v[eng]['mean_train_s']:.4f},"
                         f"eval_s={v[eng]['mean_eval_s']:.4f}")
-        if "speedup" in v:
-            rows.append(f"table2/{k}/speedup,{v['speedup']:.2f},x")
-        if "eval_speedup" in v:
-            rows.append(f"table2/{k}/eval_speedup,"
-                        f"{v['eval_speedup']:.2f},x")
+        for key in ("speedup", "eval_speedup", "overlap_speedup"):
+            if key in v:
+                rows.append(f"table2/{k}/{key},{v[key]:.2f},x")
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("loop", "vectorized", "both"),
-                    default="both")
+    ap.add_argument("--engine",
+                    choices=ENGINES + ("both", "all"), default="both",
+                    help="one engine, 'both' (loop+vectorized), or 'all'")
     ap.add_argument("--fast", action="store_true",
                     help="N in {4,16} instead of {4,16,64,256}")
+    ap.add_argument("--counts", type=str, default=None,
+                    help="comma-separated N list (overrides --fast)")
     ap.add_argument("--timing-rounds", type=int, default=3)
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="overlap engine: rounds of server-output lag")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the client stack over a federated mesh "
+                         "(pair with --force-host-devices)")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="force the CPU backend to expose this many "
+                         "devices (must run before jax init)")
     args = ap.parse_args()
+    if args.force_host_devices:
+        from repro.launch.mesh import force_host_device_count
+        force_host_device_count(args.force_host_devices)
     run(fast=args.fast, engine=args.engine,
-        timing_rounds=args.timing_rounds)
+        timing_rounds=args.timing_rounds, staleness=args.staleness,
+        mesh=args.mesh,
+        counts=([int(x) for x in args.counts.split(",")]
+                if args.counts else None))

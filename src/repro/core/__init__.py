@@ -1,7 +1,7 @@
 """ML-ECS: the paper's primary contribution — CCL (gram-volume contrastive
 alignment), AMT (LoRA adaptive tuning), MMA (modality-aware aggregation),
 SE-CCL (bidirectional SLM<->LLM knowledge transfer + jitted evaluation),
-and the Algorithm-1 federated orchestrator with its two engines."""
+and the Algorithm-1 federated orchestrator with its three engines."""
 from repro.core.gram import contrastive_loss, gram_matrix, log_volume, volume
 from repro.core.lora import (combine, communicated_fraction, merge_lora,
                              partition, default_trainable, is_lora_leaf)

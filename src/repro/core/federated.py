@@ -1,4 +1,5 @@
-"""The ML-ECS federated orchestrator — Algorithm 1 end to end, two engines.
+"""The ML-ECS federated orchestrator — Algorithm 1 end to end, three
+engines.
 
 One cloud server (unified LLM model + a server-side SLM) and N edge devices
 (unified SLM models with heterogeneous modality availability).  Per round t:
@@ -11,7 +12,7 @@ One cloud server (unified LLM model + a server-side SLM) and N edge devices
      and LLM on the public data (Eq. 15-16);
   5. the server SLM's LoRA params are redistributed to every device.
 
-Two interchangeable engines drive a round:
+Three interchangeable engines drive a round:
 
 * ``engine="loop"`` — the reference host simulation: a Python loop over
   devices with per-device jitted steps and host-side upload lists.  O(N)
@@ -29,8 +30,25 @@ Two interchangeable engines drive a round:
   ``mesh``, the stacked axis is placed on the "data" mesh axis
   (``NamedSharding``) so N clients parallelize across chips; on the
   single-device host mesh the placement is a no-op and results are exact.
+* ``engine="overlap"`` — the vectorized round split into two jitted phase
+  functions that software-pipeline across rounds: a *device phase* (CCL/AMT
+  scan + MMA aggregation = the upload) and a *server phase* (SE-CCL scan +
+  the redistributed LoRA).  The server chain lives on the last local
+  device when more than one exists, so round *r*'s SE-CCL training runs
+  concurrently with round *r+1*'s device scan (with a client ``mesh`` over
+  all devices the server device still carries 1/n_chips of the client
+  shards — SE-CCL overlaps the other shards' work); host batch
+  assembly is double-buffered by
+  :class:`repro.data.pipeline.RoundPrefetcher`.  ``cfg.staleness`` sets how
+  many rounds the redistributed LoRA (and the CCL anchor model) may lag:
+  ``staleness=0`` reproduces the vectorized engine's schedule exactly
+  (device phase *r+1* waits on server phase *r*), ``staleness=1`` feeds
+  device phase *r+1* the server outputs of round *r-1* — one round stale,
+  exactly the ECLM/FedAFD-style overlap — taking the server phase off the
+  critical path entirely.  Only the LoRA+connector subset ever crosses the
+  edge-cloud boundary (the paper's 0.65 % communication volume).
 
-Evaluation follows the same two-engine contract.  Both engines share ONE
+Evaluation follows the same engine contract.  All engines share ONE
 metric definition (:func:`repro.core.seccl.make_eval_step`: masked token CE
 + template accuracy, padding rows weighted exactly zero).  The loop engine
 drives the jitted per-batch step from a host loop over
@@ -46,7 +64,9 @@ variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import weakref
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -56,14 +76,36 @@ import numpy as np
 from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
 from repro.data.multimodal import mer_partition, paper_split, train_test_split
-from repro.data.pipeline import (batches, eval_batches, np_batches,
-                                 np_eval_batches, stack_eval_steps,
-                                 stack_steps, stacked_batches,
-                                 stacked_eval_batches)
+from repro.data.pipeline import (RoundPrefetcher, batches, eval_batches,
+                                 np_batches, np_eval_batches,
+                                 stack_eval_steps, stack_steps,
+                                 stacked_batches, stacked_eval_batches)
 from repro.models.model import ModelBundle, build_model
 from repro.optim.adamw import adamw, apply_updates
 from repro.sharding import partition as shard_part
 from repro.sharding.rules import TRAIN_RULES
+
+ENGINES = ("loop", "vectorized", "overlap")
+
+
+# Shared protocol-gating predicates.  Every engine MUST gate the same phase
+# on the same predicate — a bare ``cfg.use_seccl`` in one engine and
+# ``mode not in (...) and cfg.use_seccl`` in another silently diverges the
+# moment a new mode is added (the PR 4 engine-parity bugfix).
+
+def _do_ccl(cfg: "FederatedConfig") -> bool:
+    """Does the device phase run the CCL (public-data, anchored) steps?"""
+    return cfg.mode != "standalone" and cfg.use_ccl
+
+
+def _do_seccl(cfg: "FederatedConfig") -> bool:
+    """Does the server run the SE-CCL training phase (Alg. 1 step 4)?"""
+    return cfg.mode not in ("standalone", "fedavg") and cfg.use_seccl
+
+
+def _ccl_weight(cfg: "FederatedConfig") -> float:
+    """CCL loss weight of the device public-data steps (0 outside mlecs)."""
+    return 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
 
 
 @dataclasses.dataclass
@@ -71,7 +113,8 @@ class FederatedConfig:
     """Hyperparameters of one federated simulation.
 
     ``engine`` picks the round implementation ("vectorized" fused-jit
-    default, "loop" sequential reference); the ablation flags (``use_mma``,
+    default, "loop" sequential reference, "overlap" pipelined phases with
+    ``staleness`` rounds of server lag); the ablation flags (``use_mma``,
     ``use_seccl``, ``use_ccl``) and ``mode`` select the paper's Fig. 4 /
     baseline variants.  ``rho`` is the MER modality-existing rate drawn per
     device; ``kt_weight`` scales the SE-CCL bidirectional KT terms.
@@ -88,6 +131,11 @@ class FederatedConfig:
     n_negatives: int = 4
     seed: int = 0
     engine: str = "vectorized"       # vectorized (fused round) | loop (ref)
+                                     # | overlap (pipelined phases)
+    staleness: int = 0               # overlap engine: rounds the
+                                     # redistributed LoRA / anchor model may
+                                     # lag (0 = vectorized schedule; 1 =
+                                     # server phase off the critical path)
     # ablations / baselines
     use_mma: bool = True             # False -> uniform averaging (w/o MMA)
     use_seccl: bool = True           # False -> skip step 4     (w/o SE-CCL)
@@ -110,8 +158,10 @@ class FederatedRunner:
                  mesh=None, engine: Optional[str] = None):
         self.cfg = cfg
         self.engine = engine or cfg.engine
-        if self.engine not in ("loop", "vectorized"):
+        if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
+        if cfg.staleness < 0:
+            raise ValueError("staleness must be >= 0")
         self.mesh = mesh
         self.slm = slm_bundle
         self.llm = llm_bundle
@@ -156,7 +206,7 @@ class FederatedRunner:
             self._agg_weights = jnp.ones((cfg.n_devices,)) / cfg.n_devices
 
         bs = cfg.batch_size
-        if self.engine == "vectorized":
+        if self.engine in ("vectorized", "overlap"):
             self._device_params = None
             self._device_opt = None
             self.stacked_params = lora.stack_trees(device_params)
@@ -172,7 +222,6 @@ class FederatedRunner:
                 self.masks)
             self._server_np_iter = np_batches(self.public_train, bs,
                                               cfg.seed + 999)
-            self._round_fn = self._make_vectorized_round()
             # evaluation: the test sets normally never change, so the
             # padded device-stacked eval shards (and the server's
             # public-test stack) are built once and reused every round —
@@ -181,15 +230,18 @@ class FederatedRunner:
             self._client_eval_fn = seccl.make_eval_fn(
                 self.slm, n_clients=cfg.n_devices)
             self._server_eval_fn = seccl.make_eval_fn(self.llm)
-            self.refresh_eval_shards()
-            if mesh is not None:
-                self._place_on_mesh(mesh)
+            if self.engine == "vectorized":
+                self._round_fn = self._make_vectorized_round()
+                self.refresh_eval_shards()
+                if mesh is not None:
+                    self._place_on_mesh(mesh)
+            else:
+                self._init_overlap()
         else:
             self._device_params = device_params
             self._device_opt = device_opt
-            ccl_w = 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
             self._dev_ccl_step = ccl_lib.make_local_step(
-                self.slm, opt, ccl_weight=ccl_w,
+                self.slm, opt, ccl_weight=_ccl_weight(cfg),
                 n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
             self._dev_amt_step = ccl_lib.make_local_step(
                 self.slm, opt, ccl_weight=0.0, with_anchor=False,
@@ -216,18 +268,23 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     @property
+    def _stacked(self) -> bool:
+        """True for the engines that keep client state device-stacked."""
+        return self.engine in ("vectorized", "overlap")
+
+    @property
     def device_params(self) -> List:
         """Per-device full parameter trees (unstacked view under the
-        vectorized engine)."""
-        if self.engine == "vectorized":
+        stacked engines)."""
+        if self._stacked:
             return lora.unstack_tree(self.stacked_params, self.cfg.n_devices)
         return self._device_params
 
     @property
     def device_opt(self) -> List:
-        """Per-device optimizer states (unstacked view under the vectorized
-        engine)."""
-        if self.engine == "vectorized":
+        """Per-device optimizer states (unstacked view under the stacked
+        engines)."""
+        if self._stacked:
             return lora.unstack_tree(self.stacked_opt, self.cfg.n_devices)
         return self._device_opt
 
@@ -303,16 +360,15 @@ class FederatedRunner:
         SE-CCL, and redistribution in ONE jitted call."""
         cfg = self.cfg
         llm = self.llm
-        ccl_w = 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
         ccl_step = ccl_lib.make_stacked_step(
-            self.slm, self.opt, ccl_weight=ccl_w,
+            self.slm, self.opt, ccl_weight=_ccl_weight(cfg),
             n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
         amt_step = ccl_lib.make_stacked_step(
             self.slm, self.opt, ccl_weight=0.0, with_anchor=False,
             prox_weight=cfg.prox_weight)
         se_step = self._se_step_raw
-        do_ccl = cfg.mode != "standalone" and cfg.use_ccl
-        do_seccl = cfg.mode not in ("standalone", "fedavg") and cfg.use_seccl
+        do_ccl = _do_ccl(cfg)
+        do_seccl = _do_seccl(cfg)
 
         def round_fn(stacked_params, stacked_opt, server_llm, server_slm,
                      server_llm_opt, server_slm_opt, last_global, weights,
@@ -385,6 +441,262 @@ class FederatedRunner:
         return jax.jit(round_fn)
 
     # ------------------------------------------------------------------
+    # overlap engine: the vectorized round split into two pipelined phases
+
+    def _init_overlap(self):
+        """Engine="overlap" setup: a dedicated server device, the split
+        device/server phase functions, the staleness queue, and the
+        double-buffered host prefetcher."""
+        devs = jax.local_devices()
+        self._client_device = devs[0]
+        # the server chain runs on the last local device when more than one
+        # exists, so SE-CCL training executes concurrently with the next
+        # round's device scan.  Caveats: single-device hosts degrade to the
+        # sequential schedule (still correct, no overlap), and with a
+        # client mesh spanning all devices the server device also carries
+        # one client shard — SE-CCL then overlaps the other shards' work
+        # rather than being fully contention-free.
+        self._server_device = devs[-1]
+        self._server_separate = len(devs) > 1
+
+        def put_client(tree):
+            if self.mesh is not None:
+                return jax.device_put(
+                    tree, shard_part.replicated_shardings(tree, self.mesh))
+            return jax.device_put(tree, self._client_device)
+
+        # client-side anchor model: the frozen bulk is downloaded once; per
+        # server update only the trainable (LoRA + connector) subset is
+        # re-downloaded — the paper's 0.65 % communication volume is all
+        # that ever crosses the edge-cloud boundary
+        self._anchor_base = put_client(self.server_llm)
+        self._anchor_tr = lora.partition(self._anchor_base)
+        put_server = lambda t: jax.device_put(t, self._server_device)
+        self.server_llm = put_server(self.server_llm)
+        self.server_slm = put_server(self.server_slm)
+        self.server_llm_opt = put_server(self.server_llm_opt)
+        self.server_slm_opt = put_server(self.server_slm_opt)
+        self.last_global = put_client(self.last_global)
+        self._agg_weights = put_client(self._agg_weights)
+        if self.mesh is not None:
+            def clients(tree):
+                return jax.device_put(
+                    tree, shard_part.stacked_client_shardings(
+                        tree, self.mesh, TRAIN_RULES, axis=0))
+            self.stacked_params = clients(self.stacked_params)
+            self.stacked_opt = clients(self.stacked_opt)
+        else:
+            self.stacked_params = jax.device_put(self.stacked_params,
+                                                 self._client_device)
+            self.stacked_opt = jax.device_put(self.stacked_opt,
+                                              self._client_device)
+        (self._device_phase_fn,
+         self._server_phase_fn) = self._make_overlap_phases()
+        # server-phase outputs not yet applied to the clients; entries are
+        # (down LoRA, anchor trainables).  Popped with cfg.staleness lag.
+        self._srv_q: collections.deque = collections.deque()
+        self.refresh_eval_shards()
+        # the prefetch worker must not keep a dropped runner alive: it
+        # holds only a weakref and exits on its own once the runner is
+        # collected (close() remains the deterministic path)
+        ref = weakref.ref(self)
+
+        def assemble():
+            runner = ref()
+            return None if runner is None else runner._assemble_round()
+
+        self._prefetch = RoundPrefetcher(
+            assemble, alive=lambda: ref() is not None)
+
+    def _assemble_round(self):
+        """One round's device-ready batch stacks — the synchronous top of
+        ``_run_round_vectorized``, run on the prefetch worker instead."""
+        cfg = self.cfg
+        pub = stack_steps(self._pub_stacked, cfg.local_steps_ccl) \
+            if _do_ccl(cfg) else None
+        priv = stack_steps(self._priv_stacked, cfg.local_steps_amt)
+        server = stack_steps(self._server_np_iter, cfg.server_steps) \
+            if _do_seccl(cfg) else None
+        if self.mesh is not None:
+            def put(tree):
+                return jax.device_put(
+                    tree, shard_part.stacked_client_shardings(
+                        tree, self.mesh, TRAIN_RULES, axis=1))
+            pub = put(pub) if pub is not None else None
+            priv = put(priv)
+        if server is not None:
+            server = jax.device_put(server, self._server_device)
+        return pub, priv, server
+
+    def _make_overlap_phases(self):
+        """Build the pipelined phase functions.
+
+        * ``device_phase`` — CCL/AMT scans over the stacked clients plus the
+          MMA-weighted aggregation of the uploads (everything that runs at
+          the edge, ending in the 0.65 %-volume upload);
+        * ``server_phase`` — aggregation landing + the SE-CCL scan + the
+          redistribution payload (``down`` LoRA and the anchor-model
+          trainables), compiled onto the dedicated server device;
+        Redistribution is NOT a jitted function: :meth:`_redistribute`
+        splices the broadcast ``down`` into the stacked tree eagerly, so
+        the frozen bulk passes through by reference — a jitted combine
+        would copy every client's full frozen parameters each round (CPU
+        has no donation), which at N=64 costs more than the server phase
+        saves.
+
+        Optimizer states are donated (each chain exclusively owns its own);
+        parameter trees are NOT — under ``staleness >= 1`` a stale anchor
+        model or an unapplied ``down`` legitimately outlives the next phase
+        dispatch, and donating it would invalidate a live reference.  CPU
+        backends have no donation support, so donation is skipped there to
+        avoid per-call warnings.
+        """
+        cfg = self.cfg
+        llm = self.llm
+        ccl_step = ccl_lib.make_stacked_step(
+            self.slm, self.opt, ccl_weight=_ccl_weight(cfg),
+            n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
+        amt_step = ccl_lib.make_stacked_step(
+            self.slm, self.opt, ccl_weight=0.0, with_anchor=False,
+            prox_weight=cfg.prox_weight)
+        se_step = self._se_step_raw
+        do_ccl = _do_ccl(cfg)
+        do_seccl = _do_seccl(cfg)
+        standalone = cfg.mode == "standalone"
+        on_cpu = jax.default_backend() == "cpu"
+        donate_dev = () if on_cpu else (1,)          # stacked_opt
+        donate_srv = () if on_cpu else (2, 3)        # server opt states
+
+        def device_phase(stacked_params, stacked_opt, anchor_llm,
+                         last_global, weights, pub_steps, priv_steps):
+            if do_ccl:
+                def ccl_body(carry, batch):
+                    p, o = carry
+                    anchor = ccl_lib.stacked_server_anchors(
+                        anchor_llm, llm,
+                        dict(batch, modality_mask=jnp.ones_like(
+                            batch["modality_mask"])))
+                    p, o, _ = ccl_step(p, o, batch, anchor)
+                    return (p, o), None
+                (stacked_params, stacked_opt), _ = jax.lax.scan(
+                    ccl_body, (stacked_params, stacked_opt), pub_steps)
+
+            gref = last_global if cfg.prox_weight > 0 else None
+
+            def amt_body(carry, batch):
+                p, o = carry
+                p, o, _ = amt_step(p, o, batch, None, gref)
+                return (p, o), None
+            (stacked_params, stacked_opt), _ = jax.lax.scan(
+                amt_body, (stacked_params, stacked_opt), priv_steps)
+            if standalone:
+                return stacked_params, stacked_opt, ()
+            uploads = lora.StackedClients(
+                lora.partition(stacked_params, lora.is_lora_leaf))
+            agg = mma.aggregate_stacked(uploads, weights)
+            return stacked_params, stacked_opt, agg
+
+        def server_phase(server_llm, server_slm, server_llm_opt,
+                         server_slm_opt, agg, server_steps):
+            server_slm = lora.combine(server_slm, agg)
+            if do_seccl:
+                def se_body(carry, batch):
+                    s_llm, s_slm, o_llm, o_slm = carry
+                    s_llm, s_slm, o_llm, o_slm, _ = se_step(
+                        s_llm, s_slm, o_llm, o_slm, batch)
+                    return (s_llm, s_slm, o_llm, o_slm), None
+                (server_llm, server_slm, server_llm_opt, server_slm_opt), _ \
+                    = jax.lax.scan(
+                        se_body,
+                        (server_llm, server_slm, server_llm_opt,
+                         server_slm_opt), server_steps)
+            down = lora.partition(server_slm, lora.is_lora_leaf)
+            # SE-CCL trains the LLM's LoRA *and* connector; anchors read the
+            # connector, so the anchor download is the full trainable set
+            anchor_tr = lora.partition(server_llm)
+            return (server_llm, server_slm, server_llm_opt, server_slm_opt,
+                    down, anchor_tr)
+
+        return (jax.jit(device_phase, donate_argnums=donate_dev),
+                jax.jit(server_phase, donate_argnums=donate_srv))
+
+    def _redistribute(self, stacked_params, down):
+        """Alg. 1 step 5, eager: broadcast ``down`` over the client axis
+        and splice it into the stacked tree.  Frozen leaves pass through by
+        reference (zero copy); only the (N, ...) LoRA broadcasts
+        materialize — the same values the vectorized engine's in-jit
+        broadcast produces, bit for bit."""
+        n = self.cfg.n_devices
+        bcast = {k: jnp.broadcast_to(v, (n,) + v.shape)
+                 for k, v in down.items()}
+        return lora.combine(stacked_params, bcast)
+
+    def _to_client_placement(self, tree):
+        """Download a server-phase product (``down`` LoRA, anchor
+        trainables) to where the clients live — replicated over the mesh,
+        or the client device."""
+        if self.mesh is not None:
+            return jax.device_put(
+                tree, shard_part.replicated_shardings(tree, self.mesh))
+        return jax.device_put(tree, self._client_device)
+
+    def _run_round_overlap(self, evaluate: bool = True) -> Dict:
+        """One pipelined round.
+
+        Dispatch order: device phase *r* (consuming the prefetched stacks
+        and the *staleness*-lagged anchor model), then server phase *r* on
+        the server device (consuming the freshly-aggregated upload), then —
+        once the queue holds more than ``staleness`` pending server outputs
+        — redistribution of the oldest pending ``down`` into the client
+        stack.  With ``staleness=0`` the popped output is the one just
+        pushed, reproducing the vectorized schedule exactly; with
+        ``staleness=1`` round *r*'s server phase overlaps round *r+1*'s
+        device phase and its ``down`` lands one round late.
+        """
+        cfg = self.cfg
+        pub, priv, server = next(self._prefetch)
+        # stale-anchor model: frozen base + last downloaded trainables
+        anchor_llm = lora.combine(self._anchor_base, self._anchor_tr)
+        post_amt, self.stacked_opt, agg = self._device_phase_fn(
+            self.stacked_params, self.stacked_opt, anchor_llm,
+            self.last_global, self._agg_weights, pub, priv)
+        self.stacked_params = post_amt
+
+        if cfg.mode == "standalone":
+            if not evaluate:
+                return {}
+            return self._finalize_eval(
+                self._evaluate_clients(stacked_params=post_amt))
+
+        if cfg.mode == "fedavg":
+            # Multi-FedAvg has no server compute: the "server output" is
+            # the aggregate itself (anchor model never changes)
+            self._srv_q.append((agg, None))
+        else:
+            agg_srv = jax.device_put(agg, self._server_device)
+            (self.server_llm, self.server_slm, self.server_llm_opt,
+             self.server_slm_opt, down, anchor_tr) = self._server_phase_fn(
+                self.server_llm, self.server_slm, self.server_llm_opt,
+                self.server_slm_opt, agg_srv, server)
+            self._srv_q.append((down, anchor_tr))
+
+        if len(self._srv_q) > cfg.staleness:
+            down, anchor_tr = self._srv_q.popleft()
+            down = self._to_client_placement(down)
+            self.stacked_params = self._redistribute(self.stacked_params,
+                                                     down)
+            self.last_global = down
+            if anchor_tr is not None:
+                self._anchor_tr = self._to_client_placement(anchor_tr)
+
+        if not evaluate:
+            return {}
+        # client metrics on the post-AMT models, exactly like the other
+        # engines (the model a device serves between rounds)
+        return self._finalize_eval(
+            self._evaluate_clients(stacked_params=post_amt))
+
+    # ------------------------------------------------------------------
     def run_round(self, evaluate: bool = True) -> Dict:
         """One communication round.
 
@@ -405,19 +717,18 @@ class FederatedRunner:
         """
         if self.engine == "vectorized":
             return self._run_round_vectorized(evaluate)
+        if self.engine == "overlap":
+            return self._run_round_overlap(evaluate)
         return self._run_round_loop(evaluate)
 
     # ------------------------------------------------------------------
     def _run_round_vectorized(self, evaluate: bool = True) -> Dict:
         cfg = self.cfg
-        do_ccl = cfg.mode != "standalone" and cfg.use_ccl
-        do_seccl = (cfg.mode not in ("standalone", "fedavg")
-                    and cfg.use_seccl)
         pub = stack_steps(self._pub_stacked, cfg.local_steps_ccl) \
-            if do_ccl else None
+            if _do_ccl(cfg) else None
         priv = stack_steps(self._priv_stacked, cfg.local_steps_amt)
         server = stack_steps(self._server_np_iter, cfg.server_steps) \
-            if do_seccl else None
+            if _do_seccl(cfg) else None
         if self.mesh is not None:
             # clients live on axis 1 of the (steps, N, B, ...) stacks
             def put(tree, axis):
@@ -449,10 +760,10 @@ class FederatedRunner:
     def _run_round_loop(self, evaluate: bool = True) -> Dict:
         cfg = self.cfg
         # (2) device side: CCL then AMT
-        uploads, counts = [], []
+        uploads = []
         for j in range(cfg.n_devices):
             p, o = self._device_params[j], self._device_opt[j]
-            if cfg.mode != "standalone" and cfg.use_ccl:
+            if _do_ccl(cfg):
                 for _ in range(cfg.local_steps_ccl):
                     pub = next(self.pub_iters[j])
                     anchor = self._anchor_fn(self.server_llm, dict(
@@ -465,22 +776,20 @@ class FederatedRunner:
                                              None, gref)
             self._device_params[j], self._device_opt[j] = p, o
             uploads.append(lora.partition(p, lora.is_lora_leaf))
-            counts.append(int(self.masks[j].sum()))
 
         client_eval = self._evaluate_clients() if evaluate else None
 
         if cfg.mode == "standalone":
             return self._finalize_eval(client_eval) if evaluate else {}
 
-        # (3) MMA aggregation (Eq. 13) — or uniform for the ablation/fedavg
-        if cfg.use_mma and cfg.mode == "mlecs":
-            w = mma.aggregation_weights(counts)
-        else:
-            w = jnp.ones((cfg.n_devices,)) / cfg.n_devices
-        # same scan-ordered reduction as the vectorized engine: a plain
-        # eager sum rounds differently (FMA contraction) at bf16 ULP scale,
-        # which training then amplifies past the engines' 1e-5 agreement
-        agg = mma.aggregate_stacked(lora.StackedClients.stack(uploads), w)
+        # (3) MMA aggregation (Eq. 13) with the weights computed at init
+        # (MER masks are static) — shared with the stacked engines, so the
+        # uniform-vs-MMA gating cannot diverge.  The scan-ordered reduction
+        # matters: a plain eager sum rounds differently (FMA contraction)
+        # at bf16 ULP scale, which training then amplifies past the
+        # engines' 1e-5 agreement.
+        agg = mma.aggregate_stacked(lora.StackedClients.stack(uploads),
+                                    self._agg_weights)
 
         if cfg.mode == "fedavg":
             # Multi-FedAvg: broadcast the average straight back
@@ -492,8 +801,11 @@ class FederatedRunner:
 
         self.server_slm = lora.combine(self.server_slm, agg)
 
-        # (4) SE-CCL on the server
-        if cfg.use_seccl:
+        # (4) SE-CCL on the server — gated on the SHARED predicate (the
+        # engine-parity bugfix: a bare ``cfg.use_seccl`` here diverges from
+        # the stacked engines for any future non-mlecs mode that reaches
+        # this point)
+        if _do_seccl(cfg):
             for _ in range(cfg.server_steps):
                 batch = next(self.pub_iter_server)
                 (self.server_llm, self.server_slm, self.server_llm_opt,
@@ -511,12 +823,41 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def sync(self) -> "FederatedRunner":
-        """Block until pending round computation has materialized (jax
-        dispatch is async; benchmark timing must not measure enqueue)."""
-        state = (self.stacked_params if self.engine == "vectorized"
+        """Block until the round's *critical-path* computation has
+        materialized (jax dispatch is async; benchmark timing must not
+        measure enqueue).  Under the overlap engine the critical path is
+        the device side only — the server chain is deliberately pipelined
+        off it; use :meth:`drain` to block on everything."""
+        if self.engine == "overlap":
+            jax.block_until_ready((self.stacked_params, self.stacked_opt))
+            return self
+        state = (self.stacked_params if self._stacked
                  else self._device_params)
         jax.block_until_ready((state, self.server_llm, self.server_slm))
         return self
+
+    # ------------------------------------------------------------------
+    def drain(self) -> "FederatedRunner":
+        """Block until ALL in-flight work has materialized — device state,
+        the server chain, and any pipelined server outputs not yet applied
+        to the clients.  The overlap engine's full-state barrier (a
+        superset of :meth:`sync`); cheap and equivalent to :meth:`sync` for
+        the other engines."""
+        state = (self.stacked_params if self._stacked
+                 else self._device_params)
+        pending = list(getattr(self, "_srv_q", ()))
+        jax.block_until_ready((state, self.server_llm, self.server_slm,
+                               self.last_global, pending))
+        return self
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Stop the overlap engine's prefetch worker (no-op for the other
+        engines).  Safe to call more than once."""
+        pf = getattr(self, "_prefetch", None)
+        if pf is not None:
+            self._prefetch = None
+            pf.close()
 
     # ------------------------------------------------------------------
     def run(self) -> List[Dict]:
@@ -533,7 +874,7 @@ class FederatedRunner:
         """Per-device test metrics on the current (or given stacked) device
         models.  Vectorized: one jitted scan-over-vmap over the padded eval
         shards; loop: reference host loop, one device at a time."""
-        if self.engine == "vectorized":
+        if self._stacked:
             sp = (stacked_params if stacked_params is not None
                   else self.stacked_params)
             sums = self._client_eval_fn(sp, self._client_eval_steps)
@@ -549,7 +890,7 @@ class FederatedRunner:
         """Server (cloud LLM) metrics on the public test set — the SE-CCL
         evaluation.  N-independent; the vectorized engine runs it as one
         jitted scan so it cannot dominate small-N rounds."""
-        if self.engine == "vectorized":
+        if self._stacked:
             return seccl.metrics_from_sums(self._server_eval_fn(
                 self.server_llm, self._server_eval_steps))
         return self._eval_model(self.server_llm, self.llm,
@@ -559,10 +900,10 @@ class FederatedRunner:
         """(Re)build the vectorized engine's precomputed eval stacks from
         the CURRENT ``priv_test`` / ``public_test``.  The shards are
         snapshotted for reuse across rounds, so after mutating a test set
-        call this — otherwise the vectorized engine would keep evaluating
+        call this — otherwise the stacked engines would keep evaluating
         the stale snapshot while the loop engine (which reads the
         attributes live) sees the new data.  No-op on the loop engine."""
-        if self.engine != "vectorized":
+        if not self._stacked:
             return
         bs = self.cfg.batch_size
         self._client_eval_steps = stack_eval_steps(
@@ -573,6 +914,11 @@ class FederatedRunner:
             self._client_eval_steps = jax.device_put(
                 self._client_eval_steps, shard_part.stacked_eval_shardings(
                     self._client_eval_steps, self.mesh, TRAIN_RULES))
+        if self.engine == "overlap":
+            # the server evaluates itself where its chain lives
+            self._server_eval_steps = jax.device_put(
+                self._server_eval_steps, self._server_device)
+        elif self.mesh is not None:
             self._server_eval_steps = jax.device_put(
                 self._server_eval_steps, shard_part.replicated_shardings(
                     self._server_eval_steps, self.mesh))

@@ -13,12 +13,13 @@ smaller vocabulary (the Co-PLMs-style structure-agnostic bridge).
 This module also owns the *jitted evaluation* of a unified model
 (:func:`make_eval_step` / :func:`make_eval_fn`): one forward per batch
 producing masked metric sums (token CE, template-accuracy hits, weight).
-Both federated engines share this single metric definition — the loop
+All federated engines share this single metric definition — the loop
 engine drives the per-batch step from a host loop (the reference), while
-the vectorized engine scans it (server eval) or scans a ``vmap`` of it over
-the stacked client axis (all-clients eval) inside one jitted call, so the
-N-independent server phase and the O(N) client phase stop paying per-batch
-dispatch.
+the stacked engines (vectorized, overlap) scan it (server eval) or scan a
+``vmap`` of it over the stacked client axis (all-clients eval) inside one
+jitted call, so the N-independent server phase and the O(N) client phase
+stop paying per-batch dispatch.  Under the overlap engine the server eval
+runs on the dedicated server device, colocated with the SE-CCL chain.
 """
 from __future__ import annotations
 

@@ -18,14 +18,18 @@ Three shapes of iterator:
 :func:`stack_steps` (infinite train iterators) and
 :func:`stack_eval_steps` (finite eval iterators) add a leading step axis so
 a whole round phase transfers host->device once and runs under one
-``lax.scan``.
+``lax.scan``.  :class:`RoundPrefetcher` double-buffers that per-round
+assembly on a background thread (the overlap engine's host pipeline): round
+*r+1*'s stacks are gathered and transferred while round *r* computes.
 
 Train iterators share :func:`_index_stream` for the shuffle order; eval
 iterators share :func:`_eval_index_blocks` for the padded in-order blocks.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Sequence
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -207,3 +211,93 @@ def stack_eval_steps(it: Iterator[Dict[str, np.ndarray]]
     steps = list(it)
     assert steps, "empty eval iterator"
     return _stack_on_device(steps)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered round prefetch (the overlap engine's host-side pipeline)
+
+
+class RoundPrefetcher:
+    """Double-buffer per-round batch assembly on a background thread.
+
+    ``make_round`` pulls one communication round's worth of batches from the
+    (stateful) stacked iterators, stacks them, and transfers them to device
+    — exactly what the vectorized engine does synchronously at the top of
+    every round.  The prefetcher runs it on a daemon worker thread instead,
+    so round *r+1*'s host gather/stack/transfer overlaps with round *r*'s
+    device scan; ``next(prefetcher)`` then returns an already-materialized
+    round in ~0 host time.
+
+    The single worker pulls rounds strictly sequentially, so the underlying
+    shuffle streams are consumed in exactly the order the synchronous path
+    would consume them — prefetching never perturbs the engines' replayed
+    data, only *when* the host does the work.  ``depth`` bounds how many
+    assembled rounds may be in flight (default 1: classic double
+    buffering).  Worker exceptions are re-raised at the next ``next()``.
+
+    Lifecycle: call :meth:`close` to stop the worker deterministically.
+    ``make_round`` returning ``None`` also stops it (the end-of-source
+    contract; ``next()`` then raises ``StopIteration``), and the optional
+    ``alive`` probe is consulted between waits
+    — the overlap engine passes weakref-based versions of both, so a
+    dropped runner is collectable and its worker exits on its own instead
+    of pinning the runner (and a buffered round) for the process lifetime.
+    """
+
+    _STOP = object()
+    _END = object()
+
+    def __init__(self, make_round: Callable[[], Any], depth: int = 1,
+                 alive: Optional[Callable[[], bool]] = None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._alive = alive or (lambda: True)
+
+        def put_guarded(item):
+            """Deliver to the consumer unless stopped/orphaned."""
+            while not self._stop.is_set() and self._alive():
+                try:
+                    self._q.put(item, timeout=0.5)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def work():
+            try:
+                while not self._stop.is_set() and self._alive():
+                    item = make_round()
+                    if item is None:            # source reports exhaustion
+                        put_guarded(self._END)
+                        return
+                    put_guarded(item)
+            except BaseException as e:          # propagate to the consumer
+                self._err = e
+                self._q.put(self._STOP)
+
+        self._thread = threading.Thread(
+            target=work, name="round-prefetch", daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._STOP:
+            raise RuntimeError("round prefetch worker died") from self._err
+        if item is self._END:
+            self._q.put(self._END)      # keep raising on repeated next()
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Stop the worker thread and drop any buffered rounds."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=2.0)

@@ -38,12 +38,25 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 def gram_log_volume(vs, mask=None, eps: float = 1e-5, interpret=None):
+    """Batched masked log-volume.  The kernel grid needs the batch to be a
+    multiple of the block size, so batches over 128 rows are padded up to
+    the next multiple of 128 with all-masked rows (the kernel's pair mask
+    turns them into identity Grams, sliced off afterwards) — a prime B of
+    e.g. 131 costs one extra 128-row block, not a degenerate bb=1 grid of
+    one step per row."""
     interpret = default_interpret() if interpret is None else interpret
-    B = vs.shape[0]
+    B, k = vs.shape[0], vs.shape[1]
+    if mask is None:
+        mask = jnp.ones((B, k), jnp.bool_)
     bb = B if B <= 128 else 128
-    while B % bb:
-        bb -= 1
-    return _gram(vs, mask, eps=eps, bb=bb, interpret=interpret)
+    pad = -B % bb
+    if pad:
+        vs = jnp.concatenate(
+            [vs, jnp.zeros((pad,) + vs.shape[1:], vs.dtype)])
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((pad, k), mask.dtype)])
+    out = _gram(vs, mask, eps=eps, bb=bb, interpret=interpret)
+    return out[:B] if pad else out
 
 
 def lora_matmul(x, w, a, b, scale: float = 1.0, interpret=None, **blocks):

@@ -6,7 +6,35 @@ state; the dry-run launcher sets XLA_FLAGS before any jax import.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> None:
+    """Make the CPU backend expose ``n`` devices (XLA's forced host
+    platform), so the multi-chip sharding paths — ``stacked_client_shardings``
+    spreading N federated clients over the "data" axis, the overlap engine's
+    dedicated server device — run on a *real* multi-device mesh on any
+    laptop/CI box.
+
+    Must be called before jax initializes its backends (i.e. before any
+    computation or ``jax.devices()`` call); raises RuntimeError if the
+    backend is already up with a different device count.  Equivalent to
+    launching under ``XLA_FLAGS=--xla_force_host_platform_device_count=n``.
+    """
+    prior = os.environ.get("XLA_FLAGS", "")
+    flags = [f for f in prior.split() if not f.startswith(_FORCE_FLAG)]
+    flags.append(f"{_FORCE_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+    got = jax.local_device_count()   # initializes the backend if not yet up
+    if got != n:
+        raise RuntimeError(
+            f"jax backend already initialized with {got} devices; set "
+            f"XLA_FLAGS={_FORCE_FLAG}={n} in the environment before the "
+            "first jax call instead")
 
 # hardware constants used by the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12         # FLOP/s

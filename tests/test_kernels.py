@@ -70,6 +70,25 @@ def test_gram_volume_no_mask():
                                atol=1e-4)
 
 
+@pytest.mark.parametrize("B", [131, 257, 129])
+def test_gram_volume_prime_batch_padded(B):
+    """Prime (and otherwise 128-indivisible) batch sizes > 128 must pad to
+    the next 128 multiple with masked rows — NOT degrade to a bb=1 grid of
+    one step per row (the PR 4 block-size fallback bugfix)."""
+    vs = jax.random.normal(jax.random.key(5), (B, 4, 16))
+    mask = jax.random.bernoulli(jax.random.key(6), 0.7, (B, 4))
+    got = ops.gram_log_volume(vs, mask)
+    assert got.shape == (B,)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.gram_log_volume_ref(vs, mask)),
+                               atol=1e-4, rtol=1e-4)
+    # no-mask variant exercises the synthesized all-ones mask + padding
+    got2 = ops.gram_log_volume(vs)
+    np.testing.assert_allclose(np.asarray(got2),
+                               np.asarray(ref.gram_log_volume_ref(vs)),
+                               atol=1e-4, rtol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # lora matmul
 

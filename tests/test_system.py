@@ -40,16 +40,24 @@ def _run(corpus, rounds=2, **overrides):
     return pre, hist[-1]["summary"], runner
 
 
-def test_full_protocol_improves_clients_and_server(corpus):
-    pre, post, _ = _run(corpus, rounds=2)
+@pytest.fixture(scope="module")
+def protocol_run(corpus):
+    """ONE full 2-round mlecs run shared by the system assertions below —
+    compiling a fresh fused-round runner per test dominated the old
+    suite's wall clock (~60 s of jit per test on the 2-core CI box)."""
+    return _run(corpus, rounds=2)
+
+
+def test_full_protocol_improves_clients_and_server(protocol_run):
+    pre, post, _ = protocol_run
     assert post["avg_ce"] < pre["avg_ce"], (pre, post)
     assert post["server_ce"] < pre["server_ce"], (pre, post)
     assert np.isfinite(post["avg_ce"])
 
 
-def test_round_artifacts_finite_and_lora_only_uploaded(corpus):
+def test_round_artifacts_finite_and_lora_only_uploaded(protocol_run):
     from repro.core import lora
-    _, _, runner = _run(corpus, rounds=1)
+    _, _, runner = protocol_run
     up = lora.partition(runner.device_params[0], lora.is_lora_leaf)
     assert up and all("_lora_" in k for k in up)
     assert all(bool(jnp.all(jnp.isfinite(v))) for v in up.values())
@@ -69,6 +77,10 @@ def test_standalone_mode_never_communicates(corpus):
 
 
 def test_devices_have_heterogeneous_masks(corpus):
-    _, _, runner = _run(corpus, rounds=1)
+    # masks are drawn at construction — no training (and no jit) needed
+    slm, llm = _bundles()
+    runner = FederatedRunner(
+        FederatedConfig(n_devices=3, rounds=1, batch_size=8), slm, llm,
+        corpus)
     assert runner.masks.shape == (3, 3)
     assert runner.masks.any(axis=1).all()    # every device has >=1 modality
