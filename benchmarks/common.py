@@ -1,8 +1,10 @@
 """Shared benchmark scaffolding: the scaled-down SLM/LLM pair (the paper's
-MiniLLM-gpt2-720M / GPT-J-6B roles at laptop scale) and the synthetic VAST /
-UR-FALL analogues."""
+MiniLLM-gpt2-720M / GPT-J-6B roles at laptop scale), the synthetic VAST /
+UR-FALL analogues, and the heterogeneous-cohort spec builders for the
+model-structure-heterogeneity sweeps."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -11,6 +13,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.federated import FederatedConfig, FederatedRunner
+from repro.core.spec import ClientCohort, FederationSpec
 from repro.data.synthetic import synthetic_multimodal_corpus
 from repro.models.model import build_model
 
@@ -77,6 +80,56 @@ def run_method(method: str, corpus, rho: float, rounds: int = 3,
                          n_devices=n_devices, seed=seed, **extra)
     hist = runner.run()
     return hist[-1]["summary"], hist
+
+
+# distinct backbone widths for the architecture-heterogeneity sweep; every
+# variant keeps the bench head layout (4 x 16) so the LoRA B matrices stay
+# shape-shared with the server SLM while the A matrices go cohort-local
+_COHORT_D_MODELS = (64, 48, 32, 80)
+
+
+def heterogeneous_spec(n_cohorts: int, total_clients: int = 4,
+                       rho: float = 0.7, rounds: int = 2, seed: int = 0,
+                       engine: str = "vectorized", **extra
+                       ) -> FederationSpec:
+    """``n_cohorts`` distinct SLM architectures at a FIXED total client
+    count — the Table-1 heterogeneity sweep's unit.  ``n_cohorts=1`` is the
+    homogeneous baseline (bit-for-bit the legacy bench runner's topology);
+    larger counts split the same N clients across progressively more
+    backbone widths, leading cohorts absorbing the remainder."""
+    assert 1 <= n_cohorts <= len(_COHORT_D_MODELS)
+    assert total_clients >= n_cohorts
+    base, rem = divmod(total_clients, n_cohorts)
+    cohorts = []
+    for c in range(n_cohorts):
+        d = _COHORT_D_MODELS[c]
+        model = dataclasses.replace(slm_cfg(), name=f"bench-slm-d{d}",
+                                    d_model=d, d_ff=2 * d)
+        cohorts.append(ClientCohort(
+            model=model, n_clients=base + (1 if c < rem else 0),
+            name=f"d{d}"))
+    return FederationSpec(cohorts=tuple(cohorts), server_llm=llm_cfg(),
+                          rounds=rounds, local_steps_ccl=2,
+                          local_steps_amt=2, server_steps=2, batch_size=8,
+                          lr=1e-2, rho=rho, seed=seed, engine=engine,
+                          **extra)
+
+
+def cohort_summaries(round_metrics: dict, spec: FederationSpec) -> dict:
+    """Slice one round's global client-metric list into per-cohort rows
+    (avg/best/worst acc + avg ce), keyed by cohort name."""
+    out = {}
+    for c, (coh, off) in enumerate(zip(spec.cohorts, spec.offsets)):
+        cs = round_metrics["client"][off:off + coh.n_clients]
+        out[coh.name or f"cohort{c}"] = {
+            "n_clients": coh.n_clients,
+            "d_model": coh.model.d_model,
+            "avg_acc": float(np.mean([x["acc"] for x in cs])),
+            "best_acc": float(np.max([x["acc"] for x in cs])),
+            "worst_acc": float(np.min([x["acc"] for x in cs])),
+            "avg_ce": float(np.mean([x["ce"] for x in cs])),
+        }
+    return out
 
 
 def time_phases(runner: FederatedRunner, n_rounds: int = 3) -> dict:

@@ -1,7 +1,8 @@
 """ML-ECS: the paper's primary contribution — CCL (gram-volume contrastive
 alignment), AMT (LoRA adaptive tuning), MMA (modality-aware aggregation),
 SE-CCL (bidirectional SLM<->LLM knowledge transfer + jitted evaluation),
-and the Algorithm-1 federated orchestrator with its three engines."""
+the cohort-based FederationSpec API (model-structure heterogeneity), and
+the Algorithm-1 federated orchestrator with its three engines."""
 from repro.core.gram import contrastive_loss, gram_matrix, log_volume, volume
 from repro.core.lora import (combine, communicated_fraction, merge_lora,
                              partition, default_trainable, is_lora_leaf)
@@ -10,4 +11,5 @@ from repro.core.connector import (connector_prefix, fuse, init_connector,
 from repro.core.ccl import init_unified, mlecs_loss, make_local_step
 from repro.core.mma import aggregation_weights, aggregate, mma_psum_weights
 from repro.core.seccl import pooled_kl, kt_loss
+from repro.core.spec import ClientCohort, FederationSpec
 from repro.core.federated import FederatedConfig, FederatedRunner

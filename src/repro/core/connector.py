@@ -20,8 +20,14 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import _dense_init
 
 
-def _cdim(cfg: ModelConfig) -> int:
+def latent_dim(cfg: ModelConfig) -> int:
+    """The connector's shared latent width (``connector_dim``, defaulting
+    to ``d_model``) — the ONE resolution rule for the unified latent space;
+    spec validation and the launch shape estimator reuse it."""
     return cfg.connector_dim or cfg.d_model
+
+
+_cdim = latent_dim
 
 
 def init_connector(key, cfg: ModelConfig) -> dict:

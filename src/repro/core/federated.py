@@ -1,5 +1,5 @@
 """The ML-ECS federated orchestrator — Algorithm 1 end to end, three
-engines.
+engines, cohort-structured federations.
 
 One cloud server (unified LLM model + a server-side SLM) and N edge devices
 (unified SLM models with heterogeneous modality availability).  Per round t:
@@ -12,52 +12,82 @@ One cloud server (unified LLM model + a server-side SLM) and N edge devices
      and LLM on the public data (Eq. 15-16);
   5. the server SLM's LoRA params are redistributed to every device.
 
+**Cohorts (model-structure heterogeneity).**  The runner is built from a
+:class:`repro.core.spec.FederationSpec`: an ordered tuple of
+:class:`~repro.core.spec.ClientCohort`\\ s, each holding ``n_clients``
+devices that share ONE architecture (plus an optional modality subset,
+per-cohort MER ``rho`` and data fraction).  Intra-cohort homogeneity is the
+*documented invariant* that makes a cohort vectorizable — ``jax.vmap``
+needs one trace — so each cohort keeps its own device-stacked state and
+runs the engines' scan-over-vmap machinery internally.  Across cohorts the
+protocol operates on the **shared subset**: the LoRA keys whose path and
+shape match the server SLM (all of them in the homogeneous case; under
+heterogeneity, e.g. a different ``d_model``, the mismatched adapters
+federate within their cohort only, via the intra-cohort MMA average).
+Aggregation is two-level but order-deterministic: per-cohort f32 partial
+sums under *globally* normalized Eq. 13 weights
+(:func:`repro.core.mma.partial_aggregate_stacked`), then a cohort-ordered
+shared-key combine (:func:`repro.core.mma.combine_cohort_partials`).  The
+legacy constructor ``FederatedRunner(cfg, slm_bundle, llm_bundle, corpus)``
+survives as a thin shim over
+:meth:`repro.core.spec.FederationSpec.from_legacy` and reproduces the
+pre-cohort runner bit-for-bit (single cohort ⇒ every key shared, identical
+seeds/streams, identical fused-round computation graph).
+
 Three interchangeable engines drive a round:
 
 * ``engine="loop"`` — the reference host simulation: a Python loop over
-  devices with per-device jitted steps and host-side upload lists.  O(N)
-  dispatch overhead; kept as the numerical ground truth.
-* ``engine="vectorized"`` (default) — every device's state is stacked on a
-  leading ``device`` axis (full params/opt pytrees; trainable uploads as
-  :class:`repro.core.lora.StackedClients`) and one *fused, jitted* round
-  function runs the whole protocol: ``lax.scan`` over local steps of a
-  ``vmap``-ed CCL/AMT step, MMA weighting + aggregation as a single stacked
-  contraction, SE-CCL scanned on the server, and redistribution as a
-  broadcast — uploads never materialize as Python lists.  Per-device data
-  comes pre-batched from :func:`repro.data.pipeline.stacked_batches`, which
-  replays the exact per-device shuffle streams of the loop engine, so both
-  engines see identical data and agree on round summaries to ~1e-5.  With a
-  ``mesh``, the stacked axis is placed on the "data" mesh axis
-  (``NamedSharding``) so N clients parallelize across chips; on the
-  single-device host mesh the placement is a no-op and results are exact.
-* ``engine="overlap"`` — the vectorized round split into two jitted phase
-  functions that software-pipeline across rounds: a *device phase* (CCL/AMT
-  scan + MMA aggregation = the upload) and a *server phase* (SE-CCL scan +
-  the redistributed LoRA).  The server chain lives on the last local
-  device when more than one exists, so round *r*'s SE-CCL training runs
-  concurrently with round *r+1*'s device scan (with a client ``mesh`` over
-  all devices the server device still carries 1/n_chips of the client
-  shards — SE-CCL overlaps the other shards' work); host batch
-  assembly is double-buffered by
-  :class:`repro.data.pipeline.RoundPrefetcher`.  ``cfg.staleness`` sets how
-  many rounds the redistributed LoRA (and the CCL anchor model) may lag:
-  ``staleness=0`` reproduces the vectorized engine's schedule exactly
-  (device phase *r+1* waits on server phase *r*), ``staleness=1`` feeds
-  device phase *r+1* the server outputs of round *r-1* — one round stale,
-  exactly the ECLM/FedAFD-style overlap — taking the server phase off the
-  critical path entirely.  Only the LoRA+connector subset ever crosses the
-  edge-cloud boundary (the paper's 0.65 % communication volume).
+  cohorts and their devices with per-cohort jitted steps and host-side
+  upload lists.  O(N) dispatch overhead; kept as the numerical ground
+  truth.
+* ``engine="vectorized"`` (default) — every cohort's client state is
+  stacked on a leading ``device`` axis (full params/opt pytrees; trainable
+  uploads as :class:`repro.core.lora.StackedClients`) and one *fused,
+  jitted* round function runs the whole protocol for ALL cohorts:
+  ``lax.scan`` over local steps of each cohort's ``vmap``-ed CCL/AMT step,
+  MMA weighting + aggregation as stacked contractions, the cross-cohort
+  shared-subset combine, SE-CCL scanned on the server, and redistribution
+  as per-cohort broadcasts — uploads never materialize as Python lists.
+  Per-device data comes pre-batched from
+  :func:`repro.data.pipeline.stacked_batches` (one iterator per cohort),
+  which replays the exact per-device shuffle streams of the loop engine,
+  so the engines see identical data and agree on round summaries to ~1e-5.
+  With a ``mesh``, every cohort's stacked axis is placed on the "data"
+  mesh axis (``NamedSharding``) so clients parallelize across chips; on
+  the single-device host mesh the placement is a no-op and results are
+  exact.
+* ``engine="overlap"`` — the round split into per-cohort jitted *device
+  phases* (CCL/AMT scan + the cohort's MMA partial = the upload) and a
+  jitted *server phase* (shared-subset landing + SE-CCL scan + the
+  redistribution payload) software-pipelined across rounds.  The server
+  chain lives on the last local device when more than one exists, so round
+  *r*'s SE-CCL training runs concurrently with round *r+1*'s device scans;
+  host batch assembly is double-buffered by
+  :class:`repro.data.pipeline.RoundPrefetcher`.  ``cfg.staleness`` sets
+  how many rounds the redistributed LoRA (and the CCL anchor model) may
+  lag: ``staleness=0`` reproduces the vectorized engine's schedule
+  exactly, ``staleness=1`` feeds device phase *r+1* the server outputs of
+  round *r-1* — taking the server phase off the critical path entirely;
+  deeper staleness pipelines further (redistribution skips the ``s``
+  warm-up rounds).  ``mesh`` may also be a *per-cohort list* of meshes
+  (see :func:`repro.launch.mesh.make_cohort_meshes`): each cohort's stack
+  then shards over its own disjoint device slice, so differently-shaped
+  cohort scans — which cannot share one ``vmap`` — execute concurrently on
+  disjoint hardware via async dispatch.  Only the shared LoRA subset ever
+  crosses the edge-cloud boundary (the paper's 0.65 % communication
+  volume).
 
-Evaluation follows the same engine contract.  All engines share ONE
-metric definition (:func:`repro.core.seccl.make_eval_step`: masked token CE
-+ template accuracy, padding rows weighted exactly zero).  The loop engine
+Evaluation follows the same engine contract.  All engines share ONE metric
+definition (:func:`repro.core.seccl.make_eval_step`: masked token CE +
+template accuracy, padding rows weighted exactly zero).  The loop engine
 drives the jitted per-batch step from a host loop over
-:func:`repro.data.pipeline.eval_batches` — the reference.  The vectorized
-engine precomputes padded device-stacked eval shards
+:func:`repro.data.pipeline.eval_batches` — the reference.  The stacked
+engines precompute padded device-stacked eval shards per cohort
 (:func:`repro.data.pipeline.stacked_eval_batches`, constant across rounds)
-and computes all N client metrics in one jitted scan-over-``vmap`` call,
-plus the N-independent SE-CCL server evaluation as one jitted scan, so
-neither eval phase pays O(N) (or O(batches)) dispatch.
+and compute each cohort's client metrics in one jitted scan-over-``vmap``
+call, plus the N-independent SE-CCL server evaluation as one jitted scan.
+Round metrics list clients in global order (cohorts are contiguous index
+ranges), so single-cohort outputs are byte-identical to the legacy runner.
 
 Ablation switches (use_mma / use_seccl / use_ccl) give the paper's Fig. 4
 variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
@@ -67,7 +97,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import weakref
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +105,9 @@ import numpy as np
 
 from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
-from repro.data.multimodal import mer_partition, paper_split, train_test_split
+from repro.core.spec import (CCL_SCORES, ENGINES, MODES, ClientCohort,
+                             FederationSpec, validate_protocol)
+from repro.data.multimodal import paper_split, take_fraction, train_test_split
 from repro.data.pipeline import (RoundPrefetcher, batches, eval_batches,
                                  np_batches, np_eval_batches,
                                  stack_eval_steps, stack_steps,
@@ -85,13 +117,13 @@ from repro.optim.adamw import adamw, apply_updates
 from repro.sharding import partition as shard_part
 from repro.sharding.rules import TRAIN_RULES
 
-ENGINES = ("loop", "vectorized", "overlap")
-
 
 # Shared protocol-gating predicates.  Every engine MUST gate the same phase
 # on the same predicate — a bare ``cfg.use_seccl`` in one engine and
 # ``mode not in (...) and cfg.use_seccl`` in another silently diverges the
-# moment a new mode is added (the PR 4 engine-parity bugfix).
+# moment a new mode is added (the PR 4 engine-parity bugfix).  Mode strings
+# themselves are validated at config construction (spec.validate_protocol),
+# so an unknown mode can no longer slip through these gates.
 
 def _do_ccl(cfg: "FederatedConfig") -> bool:
     """Does the device phase run the CCL (public-data, anchored) steps?"""
@@ -110,7 +142,8 @@ def _ccl_weight(cfg: "FederatedConfig") -> float:
 
 @dataclasses.dataclass
 class FederatedConfig:
-    """Hyperparameters of one federated simulation.
+    """Hyperparameters of one federated simulation (the legacy flat view;
+    :class:`repro.core.spec.FederationSpec` is the cohort-aware superset).
 
     ``engine`` picks the round implementation ("vectorized" fused-jit
     default, "loop" sequential reference, "overlap" pipelined phases with
@@ -118,6 +151,9 @@ class FederatedConfig:
     ``use_seccl``, ``use_ccl``) and ``mode`` select the paper's Fig. 4 /
     baseline variants.  ``rho`` is the MER modality-existing rate drawn per
     device; ``kt_weight`` scales the SE-CCL bidirectional KT terms.
+    Unknown ``mode`` / ``engine`` / ``ccl_score`` strings and
+    ``staleness > 0`` outside the overlap engine are rejected at
+    construction.
     """
 
     n_devices: int = 3
@@ -147,45 +183,139 @@ class FederatedConfig:
     ccl_score: str = "volume"        # volume (paper Eq. 5-8) | cosine
                                      # (pairwise prior-work ablation)
 
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        validate_protocol(self.mode, self.engine, self.ccl_score,
+                          self.staleness)
+
+
+class _Cohort:
+    """Runtime state of one cohort: its model bundle, the contiguous
+    global-client slice it owns, globally-normalized Eq. 13 weights, the
+    server-shape-shared key subset, and the engine-specific client state
+    (device-stacked trees or per-client lists).  Internal to
+    :class:`FederatedRunner`; exposed read-only via ``runner.cohorts``."""
+
+    def __init__(self, idx: int, spec: ClientCohort, bundle: ModelBundle,
+                 offset: int):
+        self.idx = idx
+        self.spec = spec
+        self.bundle = bundle
+        self.offset = offset
+        self.n = spec.n_clients
+        self.weights = None          # (n,) globally-normalized MMA weights
+        self.w_total = 0.0           # float(sum(weights)) — cohort mass
+        self.shared: Tuple[str, ...] = ()   # server-shape-matching LoRA keys
+        self.own: Tuple[str, ...] = ()      # cohort-local LoRA keys
+        self.last_global = None      # last delivery (prox/redistribution ref)
+
+    @property
+    def slice(self) -> slice:
+        """Global client-index slice of this cohort's members."""
+        return slice(self.offset, self.offset + self.n)
+
 
 class FederatedRunner:
     """Simulates the edge-cloud environment (the paper's N=3..20 and the
-    roadmap's N>>20 sweeps).  ``engine`` overrides ``cfg.engine``; ``mesh``
-    (optional) shards the vectorized engine's client stack across chips."""
+    roadmap's N>>20 sweeps) from a :class:`FederationSpec`:
 
-    def __init__(self, cfg: FederatedConfig, slm_bundle: ModelBundle,
-                 llm_bundle: ModelBundle, corpus: Dict[str, np.ndarray],
-                 mesh=None, engine: Optional[str] = None):
-        self.cfg = cfg
-        self.engine = engine or cfg.engine
+        ``FederatedRunner(spec, corpus, mesh=..., engine=...)``
+
+    or through the legacy single-cohort shim (bit-for-bit the pre-cohort
+    runner):
+
+        ``FederatedRunner(cfg, slm_bundle, llm_bundle, corpus, ...)``
+
+    ``engine`` overrides ``spec.engine``.  ``mesh`` (optional) shards the
+    stacked engines' client stacks across chips: a single
+    ``jax.sharding.Mesh`` places every cohort on its "data" axis; a
+    per-cohort *list* of meshes (overlap engine only — one jit cannot span
+    disjoint device sets) gives each cohort its own device slice so
+    heterogeneous cohorts run concurrently."""
+
+    def __init__(self, spec, *args, mesh=None, engine: Optional[str] = None):
+        if isinstance(spec, FederationSpec):
+            if not args:
+                raise TypeError(
+                    "FederatedRunner(spec, corpus, mesh=..., engine=...)")
+            corpus, rest = args[0], args[1:]
+            bundles = [build_model(c.model) for c in spec.cohorts]
+            llm_bundle = build_model(spec.server_llm)
+            srv_slm_bundle = (bundles[0] if spec.server_slm is None
+                              else build_model(spec.server_slm))
+        elif isinstance(spec, FederatedConfig):
+            if len(args) < 3:
+                raise TypeError("legacy form: FederatedRunner(cfg, "
+                                "slm_bundle, llm_bundle, corpus, ...)")
+            slm_bundle, llm_bundle, corpus = args[:3]
+            rest = args[3:]
+            spec = FederationSpec.from_legacy(spec, slm_bundle.cfg,
+                                              llm_bundle.cfg)
+            bundles = [slm_bundle]
+            srv_slm_bundle = slm_bundle
+        else:
+            raise TypeError(f"expected FederationSpec or FederatedConfig, "
+                            f"got {type(spec).__name__}")
+        if rest:                     # positional mesh [, engine]
+            mesh = rest[0] if mesh is None else mesh
+            if len(rest) > 1 and engine is None:
+                engine = rest[1]
+
+        self.spec = spec
+        self.cfg = cfg = spec.to_config()
+        self.engine = engine or spec.engine
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
-        if cfg.staleness < 0:
-            raise ValueError("staleness must be >= 0")
-        self.mesh = mesh
-        self.slm = slm_bundle
-        self.llm = llm_bundle
-        key = jax.random.key(cfg.seed)
-        keys = jax.random.split(key, cfg.n_devices + 2)
+        if cfg.staleness > 0 and self.engine != "overlap":
+            raise ValueError("staleness > 0 requires the overlap engine")
 
-        # data: public / private, train / test, modality masks
-        public, privates = paper_split(corpus, cfg.n_devices, cfg.seed)
+        if isinstance(mesh, (list, tuple)):
+            if len(mesh) != spec.n_cohorts:
+                raise ValueError(
+                    f"per-cohort mesh list has {len(mesh)} entries for "
+                    f"{spec.n_cohorts} cohorts")
+            if self.engine != "overlap":
+                raise ValueError(
+                    "per-cohort meshes need engine='overlap' — one fused "
+                    "jit cannot span disjoint device sets; pass a single "
+                    "shared Mesh for the vectorized engine")
+            self._meshes: Optional[Tuple] = tuple(mesh)
+            self.mesh = None
+        else:
+            self._meshes = None
+            self.mesh = mesh
+
+        self.slm = bundles[0]        # legacy alias: cohort 0's bundle
+        self.llm = llm_bundle
+        self._srv_slm_bundle = srv_slm_bundle
+        N = cfg.n_devices
+        key = jax.random.key(cfg.seed)
+        keys = jax.random.split(key, N + 2)
+
+        # data: public / private, train / test, modality masks.  Private
+        # shards are allocated over the GLOBAL client index (cohort
+        # boundaries never change who owns which rows), then optionally
+        # thinned by the owning cohort's data_fraction.
+        public, privates = paper_split(corpus, N, cfg.seed)
         self.public_train, self.public_test = train_test_split(
             public, 0.1, cfg.seed)
         self.priv_train, self.priv_test = [], []
         for j, pv in enumerate(privates):
+            frac = spec.cohorts[spec.cohort_of(j)].data_fraction
+            pv = take_fraction(pv, frac, cfg.seed + 10_000 + j)
             tr, te = train_test_split(pv, 0.1, cfg.seed + j + 1)
             self.priv_train.append(tr)
             self.priv_test.append(te)
         M = corpus["modality_feats"].shape[1]
-        self.masks = mer_partition(cfg.seed, cfg.n_devices, M, cfg.rho)
+        self.masks = spec.draw_masks(M)
 
-        # models
+        # models (per-cohort architectures; global key schedule)
         device_params = [
-            ccl_lib.init_unified(keys[j], self.slm)
-            for j in range(cfg.n_devices)]
+            ccl_lib.init_unified(keys[j], bundles[spec.cohort_of(j)])
+            for j in range(N)]
         self.server_llm = ccl_lib.init_unified(keys[-1], self.llm)
-        self.server_slm = ccl_lib.init_unified(keys[-2], self.slm)
+        self.server_slm = ccl_lib.init_unified(keys[-2], srv_slm_bundle)
 
         # optimizers (trainable = LoRA + connector, the paper's AMT set)
         opt = adamw(cfg.lr, weight_decay=0.0)
@@ -194,32 +324,64 @@ class FederatedRunner:
         self.server_llm_opt = opt.init(lora.partition(self.server_llm))
         self.server_slm_opt = opt.init(lora.partition(self.server_slm))
 
-        self.last_global = lora.partition(self.server_slm, lora.is_lora_leaf)
         self._se_step_raw = self._make_seccl_step()
         self._se_step = jax.jit(self._se_step_raw)
 
-        # MMA weights (Eq. 13) depend only on the static MER masks
-        counts = [int(self.masks[j].sum()) for j in range(cfg.n_devices)]
+        # MMA weights (Eq. 13) depend only on the static MER masks and are
+        # normalized GLOBALLY, so per-cohort partial sums recompose into
+        # the flat Eq. 13 aggregate on fully-shared keys
+        counts = [int(self.masks[j].sum()) for j in range(N)]
         if cfg.use_mma and cfg.mode == "mlecs":
             self._agg_weights = mma.aggregation_weights(counts)
         else:
-            self._agg_weights = jnp.ones((cfg.n_devices,)) / cfg.n_devices
+            self._agg_weights = jnp.ones((N,)) / N
+
+        # cohort runtimes: weights slice, shared/own key split, prox ref
+        server_lora = lora.partition(self.server_slm, lora.is_lora_leaf)
+        self._server_lora_dtypes = {k: v.dtype for k, v in server_lora.items()}
+        self._cohorts: List[_Cohort] = []
+        for c, cs in enumerate(spec.cohorts):
+            rt = _Cohort(c, cs, bundles[c], spec.offsets[c])
+            rt.weights = (self._agg_weights if spec.n_cohorts == 1
+                          else self._agg_weights[rt.slice])
+            rt.w_total = float(
+                np.asarray(rt.weights, np.float32).sum(dtype=np.float32))
+            up0 = lora.partition(device_params[rt.offset], lora.is_lora_leaf)
+            rt.shared = lora.shared_keys(up0, server_lora)
+            rt.own = tuple(k for k in sorted(up0) if k not in rt.shared)
+            rt.own_dtypes = {k: up0[k].dtype for k in rt.own}
+            rt.last_global = {k: server_lora[k] for k in rt.shared}
+            self._cohorts.append(rt)
+        # the legacy fast path needs FULL key coverage, not just one
+        # cohort: a single cohort whose server_slm has a different shape
+        # (partial overlap) must still go through the shared-subset
+        # machinery or the full-shape aggregate would be spliced into the
+        # mismatched server tree
+        self._homogeneous = (spec.n_cohorts == 1
+                             and not self._cohorts[0].own
+                             and len(self._cohorts[0].shared)
+                             == len(server_lora))
 
         bs = cfg.batch_size
         if self.engine in ("vectorized", "overlap"):
-            self._device_params = None
-            self._device_opt = None
-            self.stacked_params = lora.stack_trees(device_params)
-            self.stacked_opt = lora.stack_trees(device_opt)
-            # device-stacked iterators replaying the loop engine's streams
-            self._pub_stacked = stacked_batches(
-                [self.public_train] * cfg.n_devices, bs,
-                [cfg.seed + 100 + j for j in range(cfg.n_devices)],
-                self.masks)
-            self._priv_stacked = stacked_batches(
-                self.priv_train, bs,
-                [cfg.seed + 200 + j for j in range(cfg.n_devices)],
-                self.masks)
+            for rt in self._cohorts:
+                sl = rt.slice
+                rt.stacked_params = lora.stack_trees(device_params[sl])
+                rt.stacked_opt = lora.stack_trees(device_opt[sl])
+                # device-stacked iterators replaying the loop engine's
+                # per-GLOBAL-client shuffle streams
+                rt.pub_stacked = stacked_batches(
+                    [self.public_train] * rt.n, bs,
+                    [cfg.seed + 100 + j for j in range(rt.offset,
+                                                       rt.offset + rt.n)],
+                    self.masks[sl])
+                rt.priv_stacked = stacked_batches(
+                    self.priv_train[sl], bs,
+                    [cfg.seed + 200 + j for j in range(rt.offset,
+                                                       rt.offset + rt.n)],
+                    self.masks[sl])
+                rt.client_eval_fn = seccl.make_eval_fn(rt.bundle,
+                                                       n_clients=rt.n)
             self._server_np_iter = np_batches(self.public_train, bs,
                                               cfg.seed + 999)
             # evaluation: the test sets normally never change, so the
@@ -227,43 +389,55 @@ class FederatedRunner:
             # public-test stack) are built once and reused every round —
             # call refresh_eval_shards() after mutating priv_test /
             # public_test
-            self._client_eval_fn = seccl.make_eval_fn(
-                self.slm, n_clients=cfg.n_devices)
             self._server_eval_fn = seccl.make_eval_fn(self.llm)
             if self.engine == "vectorized":
-                self._round_fn = self._make_vectorized_round()
+                if self._homogeneous:
+                    # the legacy fused single-jit round (bit-for-bit the
+                    # pre-cohort engine)
+                    self._round_fn = self._make_vectorized_round()
+                else:
+                    # multi-cohort: the split schedule — per-cohort device
+                    # phases + an EAGER cross-cohort combine + the server
+                    # phase.  The combine must run eagerly in every engine:
+                    # inside one fused jit XLA fuses it into its consumers
+                    # (server landing AND client broadcast) and the
+                    # duplicated fusions round differently at bf16 ULP,
+                    # which training amplifies past the engines' 1e-5
+                    # agreement.
+                    (self._device_phase_fns,
+                     self._server_phase_fn) = self._make_overlap_phases()
                 self.refresh_eval_shards()
-                if mesh is not None:
-                    self._place_on_mesh(mesh)
+                if self.mesh is not None:
+                    self._place_on_mesh(self.mesh)
             else:
                 self._init_overlap()
         else:
-            self._device_params = device_params
-            self._device_opt = device_opt
-            self._dev_ccl_step = ccl_lib.make_local_step(
-                self.slm, opt, ccl_weight=_ccl_weight(cfg),
-                n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
-            self._dev_amt_step = ccl_lib.make_local_step(
-                self.slm, opt, ccl_weight=0.0, with_anchor=False,
-                prox_weight=cfg.prox_weight)
+            for rt in self._cohorts:
+                sl = rt.slice
+                rt.device_params = device_params[sl]
+                rt.device_opt = device_opt[sl]
+                rt.dev_ccl_step = ccl_lib.make_local_step(
+                    rt.bundle, opt, ccl_weight=_ccl_weight(cfg),
+                    n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
+                rt.dev_amt_step = ccl_lib.make_local_step(
+                    rt.bundle, opt, ccl_weight=0.0, with_anchor=False,
+                    prox_weight=cfg.prox_weight)
+                rt.pub_iters = [
+                    batches(self.public_train, bs, cfg.seed + 100 + j,
+                            self.masks[j])
+                    for j in range(rt.offset, rt.offset + rt.n)]
+                rt.priv_iters = [
+                    batches(self.priv_train[j], bs, cfg.seed + 200 + j,
+                            self.masks[j])
+                    for j in range(rt.offset, rt.offset + rt.n)]
+                # reference evaluation: host loop over per-batch jitted
+                # steps sharing the stacked engines' exact metric definition
+                rt.eval_step = jax.jit(seccl.make_eval_step(rt.bundle))
             self._anchor_fn = jax.jit(
                 lambda p, b: ccl_lib.server_anchors(p, self.llm, b))
-            self.pub_iters = [
-                batches(self.public_train, bs, cfg.seed + 100 + j,
-                        self.masks[j])
-                for j in range(cfg.n_devices)]
             self.pub_iter_server = batches(self.public_train, bs,
                                            cfg.seed + 999)
-            self.priv_iters = [
-                batches(self.priv_train[j], bs, cfg.seed + 200 + j,
-                        self.masks[j])
-                for j in range(cfg.n_devices)]
-            # reference evaluation: host loop over per-batch jitted steps
-            # sharing the vectorized engine's exact metric definition
-            self._eval_steps_jit = {
-                "slm": jax.jit(seccl.make_eval_step(self.slm)),
-                "llm": jax.jit(seccl.make_eval_step(self.llm)),
-            }
+            self._llm_eval_step = jax.jit(seccl.make_eval_step(self.llm))
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------
@@ -273,25 +447,68 @@ class FederatedRunner:
         return self.engine in ("vectorized", "overlap")
 
     @property
+    def cohorts(self) -> Tuple[_Cohort, ...]:
+        """Read-only view of the per-cohort runtime states (offset, size,
+        shared-key subset, weights) — global client ``j`` lives in the
+        cohort whose ``offset <= j < offset + n``."""
+        return tuple(self._cohorts)
+
+    def _single(self) -> _Cohort:
+        """The sole cohort (legacy single-cohort attribute shims)."""
+        if len(self._cohorts) != 1:
+            raise AttributeError(
+                "this attribute is the legacy single-cohort view; use "
+                "runner.cohorts[c].<attr> on multi-cohort federations")
+        return self._cohorts[0]
+
+    @property
+    def stacked_params(self):
+        """Legacy single-cohort view of the device-stacked parameters."""
+        return self._single().stacked_params
+
+    @property
+    def stacked_opt(self):
+        """Legacy single-cohort view of the device-stacked opt state."""
+        return self._single().stacked_opt
+
+    @property
+    def _client_eval_steps(self):
+        """Legacy single-cohort view of the precomputed eval shards."""
+        return self._single().eval_steps
+
+    @property
     def device_params(self) -> List:
-        """Per-device full parameter trees (unstacked view under the
-        stacked engines)."""
+        """Per-device full parameter trees in GLOBAL client order
+        (unstacked views under the stacked engines)."""
         if self._stacked:
-            return lora.unstack_tree(self.stacked_params, self.cfg.n_devices)
-        return self._device_params
+            return [p for rt in self._cohorts
+                    for p in lora.unstack_tree(rt.stacked_params, rt.n)]
+        return [p for rt in self._cohorts for p in rt.device_params]
 
     @property
     def device_opt(self) -> List:
-        """Per-device optimizer states (unstacked view under the stacked
-        engines)."""
+        """Per-device optimizer states in global client order (unstacked
+        views under the stacked engines)."""
         if self._stacked:
-            return lora.unstack_tree(self.stacked_opt, self.cfg.n_devices)
-        return self._device_opt
+            return [o for rt in self._cohorts
+                    for o in lora.unstack_tree(rt.stacked_opt, rt.n)]
+        return [o for rt in self._cohorts for o in rt.device_opt]
+
+    def _mesh_for(self, idx: int):
+        """The mesh cohort ``idx`` lives on (shared, per-cohort, or None)."""
+        return self._meshes[idx] if self._meshes is not None else self.mesh
+
+    def _placement_key(self, rt: _Cohort):
+        """Identity of cohort ``rt``'s client placement — cohorts with the
+        same key may share downloaded server products (anchor base/
+        trainables) instead of holding per-cohort copies."""
+        m = self._mesh_for(rt.idx)
+        return id(m) if m is not None else None
 
     # ------------------------------------------------------------------
     def _place_on_mesh(self, mesh):
-        """Shard the client stack over the mesh "data" axis, replicate the
-        server; exact no-op on a (1, 1) host mesh."""
+        """Shard every cohort's client stack over the mesh "data" axis,
+        replicate the server; exact no-op on a (1, 1) host mesh."""
         def clients(tree):
             return jax.device_put(tree, shard_part.stacked_client_shardings(
                 tree, mesh, TRAIN_RULES, axis=0))
@@ -300,23 +517,27 @@ class FederatedRunner:
             return jax.device_put(
                 tree, shard_part.replicated_shardings(tree, mesh))
 
-        self.stacked_params = clients(self.stacked_params)
-        self.stacked_opt = clients(self.stacked_opt)
+        for rt in self._cohorts:
+            rt.stacked_params = clients(rt.stacked_params)
+            rt.stacked_opt = clients(rt.stacked_opt)
+            rt.last_global = repl(rt.last_global)
+            rt.weights = repl(rt.weights)
         self.server_llm = repl(self.server_llm)
         self.server_slm = repl(self.server_slm)
         self.server_llm_opt = repl(self.server_llm_opt)
         self.server_slm_opt = repl(self.server_slm_opt)
-        self.last_global = repl(self.last_global)
-        self._agg_weights = repl(self._agg_weights)
         # eval shards are placed by refresh_eval_shards (device axis 1 of
         # the (T, N, B, ...) client stacks, server stack replicated)
 
     # ------------------------------------------------------------------
     def _make_seccl_step(self):
         """Joint SE-CCL update: LLM minimizes Eq. 15, SLM minimizes Eq. 16.
-        Returned unjitted — the loop engine jits it per call, the vectorized
-        engine scans it inside the fused round."""
+        Returned unjitted — the loop engine jits it per call, the stacked
+        engines scan it inside the fused round / server phase.  Uses the
+        *server-side* SLM bundle (identical to the cohort bundle in the
+        homogeneous case)."""
         cfg = self.cfg
+        srv_slm = self._srv_slm_bundle
 
         def loss_pair(train_llm, train_slm, llm_params, slm_params, batch):
             llm_full = lora.combine(llm_params, train_llm)
@@ -328,9 +549,9 @@ class FederatedRunner:
                 ccl_weight=0.5 if cfg.use_ccl else 0.0,
                 n_negatives=cfg.n_negatives)
             l_slm, (_, _) = ccl_lib.mlecs_loss(
-                slm_full, self.slm, batch, anchor=None, ccl_weight=0.0)
+                slm_full, srv_slm, batch, anchor=None, ccl_weight=0.0)
             y_llm, _ = self.llm.logits(llm_full, batch)
-            y_slm, _ = self.slm.logits(slm_full, batch)
+            y_slm, _ = srv_slm.logits(slm_full, batch)
             kt_llm = seccl.kt_loss(y_llm, y_slm)      # LLM learns from SLM
             kt_slm = seccl.kt_loss(y_slm, y_llm)      # SLM learns from LLM
             total = (l_llm + cfg.kt_weight * kt_llm
@@ -354,67 +575,97 @@ class FederatedRunner:
         return step
 
     # ------------------------------------------------------------------
-    def _make_vectorized_round(self):
-        """Build the fused round function: device phase (vmap over the
-        stacked client axis, scan over local steps), MMA aggregation,
-        SE-CCL, and redistribution in ONE jitted call."""
+    # the per-cohort device chain (shared by the fused vectorized round
+    # and the overlap engine's device phases)
+
+    def _make_device_steps(self, rt: _Cohort):
+        """The cohort's vmapped CCL and AMT step functions (unjitted)."""
         cfg = self.cfg
-        llm = self.llm
         ccl_step = ccl_lib.make_stacked_step(
-            self.slm, self.opt, ccl_weight=_ccl_weight(cfg),
+            rt.bundle, self.opt, ccl_weight=_ccl_weight(cfg),
             n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
         amt_step = ccl_lib.make_stacked_step(
-            self.slm, self.opt, ccl_weight=0.0, with_anchor=False,
+            rt.bundle, self.opt, ccl_weight=0.0, with_anchor=False,
             prox_weight=cfg.prox_weight)
+        return ccl_step, amt_step
+
+    def _device_chain(self, ccl_step, amt_step, params, opt_state,
+                      anchor_llm, gref, pub_steps, priv_steps):
+        """(1)+(2) for one cohort: anchors + CCL scan, then the AMT scan —
+        traced inside the fused round or a per-cohort device phase."""
+        cfg = self.cfg
+        llm = self.llm
+        if _do_ccl(cfg):
+            def ccl_body(carry, batch):
+                p, o = carry
+                anchor = ccl_lib.stacked_server_anchors(
+                    anchor_llm, llm,
+                    dict(batch, modality_mask=jnp.ones_like(
+                        batch["modality_mask"])))
+                p, o, _ = ccl_step(p, o, batch, anchor)
+                return (p, o), None
+            (params, opt_state), _ = jax.lax.scan(
+                ccl_body, (params, opt_state), pub_steps)
+
+        def amt_body(carry, batch):
+            p, o = carry
+            p, o, _ = amt_step(p, o, batch, None, gref)
+            return (p, o), None
+        (params, opt_state), _ = jax.lax.scan(
+            amt_body, (params, opt_state), priv_steps)
+        return params, opt_state
+
+    def _cohort_delivery(self, rt: _Cohort, down: Dict, own_avg: Dict
+                         ) -> Dict:
+        """What cohort ``rt`` receives in Alg. 1 step 5: the server's
+        values on the shared-shape subset plus the intra-cohort MMA average
+        of its architecture-specific keys.  Fully-shared single cohort ⇒
+        ``down`` itself — the legacy broadcast, bit-for-bit."""
+        if self._homogeneous:
+            return down
+        delivery = {k: down[k] for k in rt.shared}
+        delivery.update(own_avg)
+        return delivery
+
+    # ------------------------------------------------------------------
+    def _make_vectorized_round(self):
+        """Build the single-cohort fused round function: the device phase
+        (vmap over the stacked client axis, scan over local steps), MMA
+        aggregation, SE-CCL, and redistribution in ONE jitted call — the
+        legacy homogeneous round, bit-for-bit.  Multi-cohort federations
+        use the split schedule instead (:meth:`_run_round_split`): the
+        cross-cohort combine must run eagerly, outside any fusion context,
+        or its duplicated fusions round differently at bf16 ULP."""
+        cfg = self.cfg
+        (rt,) = self._cohorts
+        ccl_step, amt_step = self._make_device_steps(rt)
         se_step = self._se_step_raw
-        do_ccl = _do_ccl(cfg)
         do_seccl = _do_seccl(cfg)
 
-        def round_fn(stacked_params, stacked_opt, server_llm, server_slm,
-                     server_llm_opt, server_slm_opt, last_global, weights,
-                     pub_steps, priv_steps, server_steps):
-            # (1)+(2a) anchors + device CCL, scanned over local steps
-            if do_ccl:
-                def ccl_body(carry, batch):
-                    p, o = carry
-                    anchor = ccl_lib.stacked_server_anchors(
-                        server_llm, llm,
-                        dict(batch, modality_mask=jnp.ones_like(
-                            batch["modality_mask"])))
-                    p, o, _ = ccl_step(p, o, batch, anchor)
-                    return (p, o), None
-                (stacked_params, stacked_opt), _ = jax.lax.scan(
-                    ccl_body, (stacked_params, stacked_opt), pub_steps)
-
-            # (2b) device AMT on private data
-            gref = last_global if cfg.prox_weight > 0 else None
-
-            def amt_body(carry, batch):
-                p, o = carry
-                p, o, _ = amt_step(p, o, batch, None, gref)
-                return (p, o), None
-            (stacked_params, stacked_opt), _ = jax.lax.scan(
-                amt_body, (stacked_params, stacked_opt), priv_steps)
-
-            # the models devices actually serve between rounds (client eval)
-            post_amt = stacked_params
+        def round_fn(states, server_llm, server_slm, server_llm_opt,
+                     server_slm_opt, last_globals, weights, pubs, privs,
+                     server_steps):
+            gref = last_globals[0] if cfg.prox_weight > 0 else None
+            p, o = self._device_chain(
+                ccl_step, amt_step, states[0][0], states[0][1], server_llm,
+                gref, pubs[0], privs[0])
+            # the model devices actually serve between rounds (client eval)
+            post_amt = (p,)
 
             if cfg.mode == "standalone":
-                return (post_amt, stacked_params, stacked_opt, server_llm,
-                        server_slm, server_llm_opt, server_slm_opt,
-                        last_global)
+                return (post_amt, ((p, o),), server_llm, server_slm,
+                        server_llm_opt, server_slm_opt, last_globals)
 
             # (3) MMA aggregation (Eq. 13) over the stacked upload axis
             uploads = lora.StackedClients(
-                lora.partition(stacked_params, lora.is_lora_leaf))
-            agg = mma.aggregate_stacked(uploads, weights)
+                lora.partition(p, lora.is_lora_leaf))
+            agg = mma.aggregate_stacked(uploads, weights[0])
 
             if cfg.mode == "fedavg":
                 # Multi-FedAvg: broadcast the average straight back
-                stacked_params = lora.combine(
-                    stacked_params, uploads.broadcast(agg).trainable)
-                return (post_amt, stacked_params, stacked_opt, server_llm,
-                        server_slm, server_llm_opt, server_slm_opt, agg)
+                p = lora.combine(p, uploads.broadcast(agg).trainable)
+                return (post_amt, ((p, o),), server_llm, server_slm,
+                        server_llm_opt, server_slm_opt, (agg,))
 
             server_slm = lora.combine(server_slm, agg)
 
@@ -433,67 +684,73 @@ class FederatedRunner:
 
             # (5) redistribute server-SLM LoRA to every device (broadcast)
             down = lora.partition(server_slm, lora.is_lora_leaf)
-            stacked_params = lora.combine(
-                stacked_params, uploads.broadcast(down).trainable)
-            return (post_amt, stacked_params, stacked_opt, server_llm,
-                    server_slm, server_llm_opt, server_slm_opt, down)
+            p = lora.combine(p, uploads.broadcast(down).trainable)
+            return (post_amt, ((p, o),), server_llm, server_slm,
+                    server_llm_opt, server_slm_opt, (down,))
 
         return jax.jit(round_fn)
 
     # ------------------------------------------------------------------
-    # overlap engine: the vectorized round split into two pipelined phases
+    # overlap engine: the round split into per-cohort device phases and a
+    # server phase, software-pipelined across rounds
 
     def _init_overlap(self):
-        """Engine="overlap" setup: a dedicated server device, the split
-        device/server phase functions, the staleness queue, and the
-        double-buffered host prefetcher."""
+        """Engine="overlap" setup: a dedicated server device, per-cohort
+        device-phase functions + the shared server phase, the staleness
+        queue, and the double-buffered host prefetcher."""
         devs = jax.local_devices()
         self._client_device = devs[0]
         # the server chain runs on the last local device when more than one
-        # exists, so SE-CCL training executes concurrently with the next
-        # round's device scan.  Caveats: single-device hosts degrade to the
-        # sequential schedule (still correct, no overlap), and with a
+        # exists, so SE-CCL training executes concurrently with the
+        # cohorts' device scans.  Caveats: single-device hosts degrade to
+        # the sequential schedule (still correct, no overlap), and with a
         # client mesh spanning all devices the server device also carries
         # one client shard — SE-CCL then overlaps the other shards' work
         # rather than being fully contention-free.
         self._server_device = devs[-1]
         self._server_separate = len(devs) > 1
 
-        def put_client(tree):
-            if self.mesh is not None:
-                return jax.device_put(
-                    tree, shard_part.replicated_shardings(tree, self.mesh))
-            return jax.device_put(tree, self._client_device)
-
-        # client-side anchor model: the frozen bulk is downloaded once; per
-        # server update only the trainable (LoRA + connector) subset is
-        # re-downloaded — the paper's 0.65 % communication volume is all
-        # that ever crosses the edge-cloud boundary
-        self._anchor_base = put_client(self.server_llm)
-        self._anchor_tr = lora.partition(self._anchor_base)
+        # client-side anchor model per cohort placement: the frozen bulk is
+        # downloaded once PER DISTINCT PLACEMENT (cohorts sharing a mesh /
+        # the client device share one copy — duplicating the largest
+        # model's frozen bulk per cohort would multiply anchor memory by
+        # n_cohorts for identical bytes); per server update only the
+        # trainable (LoRA + connector) subset is re-downloaded — the
+        # paper's 0.65 % communication volume is all that crosses the
+        # boundary
+        bases = {}
+        for rt in self._cohorts:
+            key = self._placement_key(rt)
+            if key not in bases:
+                bases[key] = self._to_client_placement(rt, self.server_llm)
+            rt.anchor_base = bases[key]
+            rt.anchor_tr = lora.partition(rt.anchor_base)
         put_server = lambda t: jax.device_put(t, self._server_device)
         self.server_llm = put_server(self.server_llm)
         self.server_slm = put_server(self.server_slm)
         self.server_llm_opt = put_server(self.server_llm_opt)
         self.server_slm_opt = put_server(self.server_slm_opt)
-        self.last_global = put_client(self.last_global)
-        self._agg_weights = put_client(self._agg_weights)
-        if self.mesh is not None:
-            def clients(tree):
-                return jax.device_put(
-                    tree, shard_part.stacked_client_shardings(
-                        tree, self.mesh, TRAIN_RULES, axis=0))
-            self.stacked_params = clients(self.stacked_params)
-            self.stacked_opt = clients(self.stacked_opt)
-        else:
-            self.stacked_params = jax.device_put(self.stacked_params,
-                                                 self._client_device)
-            self.stacked_opt = jax.device_put(self.stacked_opt,
-                                              self._client_device)
-        (self._device_phase_fn,
+        for rt in self._cohorts:
+            rt.last_global = self._to_client_placement(rt, rt.last_global)
+            rt.weights = self._to_client_placement(rt, rt.weights)
+            m = self._mesh_for(rt.idx)
+            if m is not None:
+                def clients(tree, _m=m):
+                    return jax.device_put(
+                        tree, shard_part.stacked_client_shardings(
+                            tree, _m, TRAIN_RULES, axis=0))
+                rt.stacked_params = clients(rt.stacked_params)
+                rt.stacked_opt = clients(rt.stacked_opt)
+            else:
+                rt.stacked_params = jax.device_put(rt.stacked_params,
+                                                   self._client_device)
+                rt.stacked_opt = jax.device_put(rt.stacked_opt,
+                                                self._client_device)
+        (self._device_phase_fns,
          self._server_phase_fn) = self._make_overlap_phases()
         # server-phase outputs not yet applied to the clients; entries are
-        # (down LoRA, anchor trainables).  Popped with cfg.staleness lag.
+        # (down LoRA, anchor trainables, per-cohort own-key averages).
+        # Popped with cfg.staleness lag.
         self._srv_q: collections.deque = collections.deque()
         self.refresh_eval_shards()
         # the prefetch worker must not keep a dropped runner alive: it
@@ -509,40 +766,98 @@ class FederatedRunner:
             assemble, alive=lambda: ref() is not None)
 
     def _assemble_round(self):
-        """One round's device-ready batch stacks — the synchronous top of
-        ``_run_round_vectorized``, run on the prefetch worker instead."""
+        """One round's device-ready batch stacks (one pub/priv stack per
+        cohort; clients live on axis 1 of the (steps, n, B, ...) leaves).
+        The synchronous top of the stacked rounds — the overlap engine runs
+        it on the prefetch worker instead, and places the server stack on
+        its dedicated server device."""
         cfg = self.cfg
-        pub = stack_steps(self._pub_stacked, cfg.local_steps_ccl) \
-            if _do_ccl(cfg) else None
-        priv = stack_steps(self._priv_stacked, cfg.local_steps_amt)
+        pubs, privs = [], []
+        for rt in self._cohorts:
+            pub = stack_steps(rt.pub_stacked, cfg.local_steps_ccl) \
+                if _do_ccl(cfg) else None
+            priv = stack_steps(rt.priv_stacked, cfg.local_steps_amt)
+            m = self._mesh_for(rt.idx)
+            if m is not None:
+                def put(tree, _m=m):
+                    return jax.device_put(
+                        tree, shard_part.stacked_client_shardings(
+                            tree, _m, TRAIN_RULES, axis=1))
+                pub = put(pub) if pub is not None else None
+                priv = put(priv)
+            pubs.append(pub)
+            privs.append(priv)
         server = stack_steps(self._server_np_iter, cfg.server_steps) \
             if _do_seccl(cfg) else None
-        if self.mesh is not None:
-            def put(tree):
-                return jax.device_put(
-                    tree, shard_part.stacked_client_shardings(
-                        tree, self.mesh, TRAIN_RULES, axis=1))
-            pub = put(pub) if pub is not None else None
-            priv = put(priv)
         if server is not None:
-            server = jax.device_put(server, self._server_device)
-        return pub, priv, server
+            srv_dev = getattr(self, "_server_device", None)
+            if srv_dev is not None:
+                server = jax.device_put(server, srv_dev)
+            elif self.mesh is not None:
+                server = jax.device_put(
+                    server,
+                    shard_part.replicated_shardings(server, self.mesh))
+        return tuple(pubs), tuple(privs), server
+
+    def _own_avgs(self, partials) -> Tuple[Dict, ...]:
+        """Each cohort's intra-cohort MMA average of its architecture-
+        specific (non-shared) keys, from its f32 partial sums — computed
+        EAGERLY with one shared op sequence, so every engine rounds these
+        identically (in-jit variants fuse differently at bf16 ULP)."""
+        return tuple(
+            {k: (p[k] / np.float32(rt.w_total)).astype(rt.own_dtypes[k])
+             for k in rt.own}
+            for rt, p in zip(self._cohorts, partials))
+
+    def _combine_payloads(self, payloads, device=None):
+        """Fold the cohorts' device-phase payloads into the server-bound
+        aggregate.  Fully-shared single cohort: the payload already IS the
+        legacy Eq. 13 aggregate.  Otherwise the payloads are f32 partial
+        sums — take the eager own-key averages on their source placement,
+        move the partials to the combine placement, and run the
+        shared-subset combine, EAGERLY and in the same op sequence in
+        every engine (see the split-schedule note in ``__init__``).
+        Returns ``(agg, own_avgs)``."""
+        if self._homogeneous:
+            return payloads[0], ({},)
+        own_avgs = self._own_avgs(payloads)
+        partials = payloads if device is None else [
+            jax.device_put(p, device) for p in payloads]
+        agg = mma.combine_cohort_partials(
+            partials, [rt.shared for rt in self._cohorts],
+            [rt.w_total for rt in self._cohorts],
+            self._server_lora_dtypes)
+        return agg, own_avgs
+
+    def _apply_deliveries(self, down, own_avgs) -> None:
+        """Alg. 1 step 5 across cohorts: splice each cohort's delivery
+        (shared subset from ``down`` + its own-key averages) into its
+        stacked tree and remember it as the prox/redistribution
+        reference."""
+        for c, rt in enumerate(self._cohorts):
+            delivery = self._to_client_placement(
+                rt, self._cohort_delivery(rt, down, own_avgs[c]))
+            rt.stacked_params = self._redistribute(
+                rt, rt.stacked_params, delivery)
+            rt.last_global = delivery
 
     def _make_overlap_phases(self):
         """Build the pipelined phase functions.
 
-        * ``device_phase`` — CCL/AMT scans over the stacked clients plus the
-          MMA-weighted aggregation of the uploads (everything that runs at
-          the edge, ending in the 0.65 %-volume upload);
+        * per-cohort ``device_phase`` — the cohort's CCL/AMT scans plus its
+          MMA upload payload: the full aggregate in the single-cohort case
+          (the legacy graph), or the f32 partial sums + the cohort-local
+          key averages under heterogeneity (everything that runs at the
+          edge, ending in the 0.65 %-volume upload);
         * ``server_phase`` — aggregation landing + the SE-CCL scan + the
           redistribution payload (``down`` LoRA and the anchor-model
-          trainables), compiled onto the dedicated server device;
+          trainables), compiled onto the dedicated server device.
         Redistribution is NOT a jitted function: :meth:`_redistribute`
-        splices the broadcast ``down`` into the stacked tree eagerly, so
-        the frozen bulk passes through by reference — a jitted combine
-        would copy every client's full frozen parameters each round (CPU
-        has no donation), which at N=64 costs more than the server phase
-        saves.
+        splices the broadcast delivery into each cohort's stacked tree
+        eagerly, so the frozen bulk passes through by reference — a jitted
+        combine would copy every client's full frozen parameters each
+        round (CPU has no donation), which at N=64 costs more than the
+        server phase saves.
 
         Optimizer states are donated (each chain exclusively owns its own);
         parameter trees are NOT — under ``staleness >= 1`` a stale anchor
@@ -552,49 +867,38 @@ class FederatedRunner:
         avoid per-call warnings.
         """
         cfg = self.cfg
-        llm = self.llm
-        ccl_step = ccl_lib.make_stacked_step(
-            self.slm, self.opt, ccl_weight=_ccl_weight(cfg),
-            n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
-        amt_step = ccl_lib.make_stacked_step(
-            self.slm, self.opt, ccl_weight=0.0, with_anchor=False,
-            prox_weight=cfg.prox_weight)
         se_step = self._se_step_raw
-        do_ccl = _do_ccl(cfg)
         do_seccl = _do_seccl(cfg)
         standalone = cfg.mode == "standalone"
+        multi = not self._homogeneous
         on_cpu = jax.default_backend() == "cpu"
         donate_dev = () if on_cpu else (1,)          # stacked_opt
         donate_srv = () if on_cpu else (2, 3)        # server opt states
 
-        def device_phase(stacked_params, stacked_opt, anchor_llm,
-                         last_global, weights, pub_steps, priv_steps):
-            if do_ccl:
-                def ccl_body(carry, batch):
-                    p, o = carry
-                    anchor = ccl_lib.stacked_server_anchors(
-                        anchor_llm, llm,
-                        dict(batch, modality_mask=jnp.ones_like(
-                            batch["modality_mask"])))
-                    p, o, _ = ccl_step(p, o, batch, anchor)
-                    return (p, o), None
-                (stacked_params, stacked_opt), _ = jax.lax.scan(
-                    ccl_body, (stacked_params, stacked_opt), pub_steps)
+        def make_device_phase(rt: _Cohort):
+            ccl_step, amt_step = self._make_device_steps(rt)
 
-            gref = last_global if cfg.prox_weight > 0 else None
+            def device_phase(stacked_params, stacked_opt, anchor_llm,
+                             last_global, weights, pub_steps, priv_steps):
+                gref = last_global if cfg.prox_weight > 0 else None
+                stacked_params, stacked_opt = self._device_chain(
+                    ccl_step, amt_step, stacked_params, stacked_opt,
+                    anchor_llm, gref, pub_steps, priv_steps)
+                if standalone:
+                    return stacked_params, stacked_opt, ()
+                uploads = lora.StackedClients(
+                    lora.partition(stacked_params, lora.is_lora_leaf))
+                if not multi:
+                    # legacy single-cohort: the payload IS the aggregate
+                    agg = mma.aggregate_stacked(uploads, weights)
+                    return stacked_params, stacked_opt, agg
+                # heterogeneous: only the f32 partial leaves the jit — the
+                # own-key averages and the cross-cohort combine happen
+                # eagerly so every engine rounds them identically
+                partial = mma.partial_aggregate_stacked(uploads, weights)
+                return stacked_params, stacked_opt, partial
 
-            def amt_body(carry, batch):
-                p, o = carry
-                p, o, _ = amt_step(p, o, batch, None, gref)
-                return (p, o), None
-            (stacked_params, stacked_opt), _ = jax.lax.scan(
-                amt_body, (stacked_params, stacked_opt), priv_steps)
-            if standalone:
-                return stacked_params, stacked_opt, ()
-            uploads = lora.StackedClients(
-                lora.partition(stacked_params, lora.is_lora_leaf))
-            agg = mma.aggregate_stacked(uploads, weights)
-            return stacked_params, stacked_opt, agg
+            return jax.jit(device_phase, donate_argnums=donate_dev)
 
         def server_phase(server_llm, server_slm, server_llm_opt,
                          server_slm_opt, agg, server_steps):
@@ -617,95 +921,113 @@ class FederatedRunner:
             return (server_llm, server_slm, server_llm_opt, server_slm_opt,
                     down, anchor_tr)
 
-        return (jax.jit(device_phase, donate_argnums=donate_dev),
+        return ([make_device_phase(rt) for rt in self._cohorts],
                 jax.jit(server_phase, donate_argnums=donate_srv))
 
-    def _redistribute(self, stacked_params, down):
-        """Alg. 1 step 5, eager: broadcast ``down`` over the client axis
-        and splice it into the stacked tree.  Frozen leaves pass through by
-        reference (zero copy); only the (N, ...) LoRA broadcasts
-        materialize — the same values the vectorized engine's in-jit
-        broadcast produces, bit for bit."""
-        n = self.cfg.n_devices
-        bcast = {k: jnp.broadcast_to(v, (n,) + v.shape)
-                 for k, v in down.items()}
+    def _redistribute(self, rt: _Cohort, stacked_params, delivery):
+        """Alg. 1 step 5, eager: broadcast the cohort's delivery over its
+        client axis and splice it into the stacked tree.  Frozen leaves
+        pass through by reference (zero copy); only the (n, ...) LoRA
+        broadcasts materialize — the same values the vectorized engine's
+        in-jit broadcast produces, bit for bit."""
+        bcast = {k: jnp.broadcast_to(v, (rt.n,) + v.shape)
+                 for k, v in delivery.items()}
         return lora.combine(stacked_params, bcast)
 
-    def _to_client_placement(self, tree):
-        """Download a server-phase product (``down`` LoRA, anchor
-        trainables) to where the clients live — replicated over the mesh,
-        or the client device."""
-        if self.mesh is not None:
+    def _to_client_placement(self, rt: _Cohort, tree):
+        """Download a server-phase product (delivery LoRA, anchor
+        trainables) to where cohort ``rt``'s clients live — replicated
+        over the cohort's mesh, or the overlap engine's client device (the
+        vectorized split schedule has no committed client device and
+        leaves default placement)."""
+        m = self._mesh_for(rt.idx)
+        if m is not None:
             return jax.device_put(
-                tree, shard_part.replicated_shardings(tree, self.mesh))
-        return jax.device_put(tree, self._client_device)
+                tree, shard_part.replicated_shardings(tree, m))
+        dev = getattr(self, "_client_device", None)
+        return tree if dev is None else jax.device_put(tree, dev)
 
     def _run_round_overlap(self, evaluate: bool = True) -> Dict:
         """One pipelined round.
 
-        Dispatch order: device phase *r* (consuming the prefetched stacks
-        and the *staleness*-lagged anchor model), then server phase *r* on
-        the server device (consuming the freshly-aggregated upload), then —
-        once the queue holds more than ``staleness`` pending server outputs
-        — redistribution of the oldest pending ``down`` into the client
-        stack.  With ``staleness=0`` the popped output is the one just
-        pushed, reproducing the vectorized schedule exactly; with
-        ``staleness=1`` round *r*'s server phase overlaps round *r+1*'s
-        device phase and its ``down`` lands one round late.
+        Dispatch order: every cohort's device phase *r* (consuming the
+        prefetched stacks and the *staleness*-lagged anchor model) — on
+        per-cohort meshes these run concurrently via async dispatch — then
+        server phase *r* on the server device (consuming the combined
+        shared-subset upload), then — once the queue holds more than
+        ``staleness`` pending server outputs — redistribution of the
+        oldest pending delivery into each cohort's stack.  With
+        ``staleness=0`` the popped output is the one just pushed,
+        reproducing the vectorized schedule exactly; with ``staleness=1``
+        round *r*'s server phase overlaps round *r+1*'s device phases and
+        its delivery lands one round late.
         """
         cfg = self.cfg
-        pub, priv, server = next(self._prefetch)
-        # stale-anchor model: frozen base + last downloaded trainables
-        anchor_llm = lora.combine(self._anchor_base, self._anchor_tr)
-        post_amt, self.stacked_opt, agg = self._device_phase_fn(
-            self.stacked_params, self.stacked_opt, anchor_llm,
-            self.last_global, self._agg_weights, pub, priv)
-        self.stacked_params = post_amt
+        pubs, privs, server = next(self._prefetch)
+        payloads, post_amts = [], []
+        for c, rt in enumerate(self._cohorts):
+            # stale-anchor model: frozen base + last downloaded trainables
+            anchor_llm = lora.combine(rt.anchor_base, rt.anchor_tr)
+            post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
+                rt.stacked_params, rt.stacked_opt, anchor_llm,
+                rt.last_global, rt.weights, pubs[c], privs[c])
+            rt.stacked_params = post_amt
+            post_amts.append(post_amt)
+            payloads.append(payload)
 
         if cfg.mode == "standalone":
             if not evaluate:
                 return {}
             return self._finalize_eval(
-                self._evaluate_clients(stacked_params=post_amt))
+                self._evaluate_clients(post_amt=post_amts))
+
+        # the 0.65 %-volume uplink: the cohorts' partials land on the
+        # server device, where the shared-subset combine runs
+        agg, own_avgs = self._combine_payloads(payloads,
+                                               device=self._server_device)
 
         if cfg.mode == "fedavg":
             # Multi-FedAvg has no server compute: the "server output" is
             # the aggregate itself (anchor model never changes)
-            self._srv_q.append((agg, None))
+            self._srv_q.append((agg, None, own_avgs))
         else:
             agg_srv = jax.device_put(agg, self._server_device)
             (self.server_llm, self.server_slm, self.server_llm_opt,
              self.server_slm_opt, down, anchor_tr) = self._server_phase_fn(
                 self.server_llm, self.server_slm, self.server_llm_opt,
                 self.server_slm_opt, agg_srv, server)
-            self._srv_q.append((down, anchor_tr))
+            self._srv_q.append((down, anchor_tr, own_avgs))
 
         if len(self._srv_q) > cfg.staleness:
-            down, anchor_tr = self._srv_q.popleft()
-            down = self._to_client_placement(down)
-            self.stacked_params = self._redistribute(self.stacked_params,
-                                                     down)
-            self.last_global = down
+            down, anchor_tr, oa = self._srv_q.popleft()
+            self._apply_deliveries(down, oa)
             if anchor_tr is not None:
-                self._anchor_tr = self._to_client_placement(anchor_tr)
+                # one download per distinct client placement, shared by
+                # the cohorts living there
+                puts = {}
+                for rt in self._cohorts:
+                    key = self._placement_key(rt)
+                    if key not in puts:
+                        puts[key] = self._to_client_placement(rt, anchor_tr)
+                    rt.anchor_tr = puts[key]
 
         if not evaluate:
             return {}
         # client metrics on the post-AMT models, exactly like the other
         # engines (the model a device serves between rounds)
         return self._finalize_eval(
-            self._evaluate_clients(stacked_params=post_amt))
+            self._evaluate_clients(post_amt=post_amts))
 
     # ------------------------------------------------------------------
     def run_round(self, evaluate: bool = True) -> Dict:
         """One communication round.
 
         With ``evaluate=True`` (default) returns the full metrics dict
-        (``client`` per-device list, ``server``, ``summary``): client-side
-        metrics are measured on the *post-AMT* device models (the model a
-        device actually serves between rounds, before redistribution);
-        server metrics after SE-CCL.  Redistribution (Alg. 1 step 5) seeds
-        the NEXT round's devices.
+        (``client`` per-device list in global client order, ``server``,
+        ``summary``): client-side metrics are measured on the *post-AMT*
+        device models (the model a device actually serves between rounds,
+        before redistribution); server metrics after SE-CCL.
+        Redistribution (Alg. 1 step 5) seeds the NEXT round's devices.
 
         ``evaluate=False`` skips ALL metric computation and returns ``{}``
         — the round's training state still advances identically, but no
@@ -723,59 +1045,83 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def _run_round_vectorized(self, evaluate: bool = True) -> Dict:
+        if not self._homogeneous:
+            return self._run_round_split(evaluate)
         cfg = self.cfg
-        pub = stack_steps(self._pub_stacked, cfg.local_steps_ccl) \
-            if _do_ccl(cfg) else None
-        priv = stack_steps(self._priv_stacked, cfg.local_steps_amt)
-        server = stack_steps(self._server_np_iter, cfg.server_steps) \
-            if _do_seccl(cfg) else None
-        if self.mesh is not None:
-            # clients live on axis 1 of the (steps, N, B, ...) stacks
-            def put(tree, axis):
-                if tree is None:
-                    return None
-                return jax.device_put(
-                    tree, shard_part.stacked_client_shardings(
-                        tree, self.mesh, TRAIN_RULES, axis=axis))
-            pub, priv = put(pub, 1), put(priv, 1)
-            if server is not None:
-                server = jax.device_put(
-                    server,
-                    shard_part.replicated_shardings(server, self.mesh))
-
-        (post_amt, self.stacked_params, self.stacked_opt, self.server_llm,
-         self.server_slm, self.server_llm_opt, self.server_slm_opt,
-         self.last_global) = self._round_fn(
-            self.stacked_params, self.stacked_opt, self.server_llm,
-            self.server_slm, self.server_llm_opt, self.server_slm_opt,
-            self.last_global, self._agg_weights, pub, priv, server)
+        pubs, privs, server = self._assemble_round()
+        states = tuple((rt.stacked_params, rt.stacked_opt)
+                       for rt in self._cohorts)
+        lgs = tuple(rt.last_global for rt in self._cohorts)
+        ws = tuple(rt.weights for rt in self._cohorts)
+        (post_amt, states, self.server_llm, self.server_slm,
+         self.server_llm_opt, self.server_slm_opt, lgs) = self._round_fn(
+            states, self.server_llm, self.server_slm, self.server_llm_opt,
+            self.server_slm_opt, lgs, ws, pubs, privs, server)
+        for rt, (p, o), lg in zip(self._cohorts, states, lgs):
+            rt.stacked_params, rt.stacked_opt, rt.last_global = p, o, lg
 
         if not evaluate:
             return {}
-        # all N client evals in one jitted scan-over-vmap call
+        # all clients' evals in one jitted scan-over-vmap call per cohort
+        return self._finalize_eval(self._evaluate_clients(post_amt=post_amt))
+
+    def _run_round_split(self, evaluate: bool = True) -> Dict:
+        """The multi-cohort vectorized round: the overlap engine's phase
+        functions dispatched *synchronously* — per-cohort device phases,
+        the eager cross-cohort combine, the server phase, and immediate
+        redistribution.  No pipelining, no staleness, no prefetch thread;
+        anchors always come from the live server LLM."""
+        cfg = self.cfg
+        pubs, privs, server = self._assemble_round()
+        payloads, post_amts = [], []
+        for c, rt in enumerate(self._cohorts):
+            post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
+                rt.stacked_params, rt.stacked_opt, self.server_llm,
+                rt.last_global, rt.weights, pubs[c], privs[c])
+            rt.stacked_params = post_amt
+            post_amts.append(post_amt)
+            payloads.append(payload)
+
+        if cfg.mode != "standalone":
+            agg, own_avgs = self._combine_payloads(payloads)
+            if cfg.mode == "fedavg":
+                self._apply_deliveries(agg, own_avgs)
+            else:
+                (self.server_llm, self.server_slm, self.server_llm_opt,
+                 self.server_slm_opt, down, _) = self._server_phase_fn(
+                    self.server_llm, self.server_slm, self.server_llm_opt,
+                    self.server_slm_opt, agg, server)
+                self._apply_deliveries(down, own_avgs)
+
+        if not evaluate:
+            return {}
         return self._finalize_eval(
-            self._evaluate_clients(stacked_params=post_amt))
+            self._evaluate_clients(post_amt=post_amts))
 
     # ------------------------------------------------------------------
     def _run_round_loop(self, evaluate: bool = True) -> Dict:
         cfg = self.cfg
-        # (2) device side: CCL then AMT
-        uploads = []
-        for j in range(cfg.n_devices):
-            p, o = self._device_params[j], self._device_opt[j]
-            if _do_ccl(cfg):
-                for _ in range(cfg.local_steps_ccl):
-                    pub = next(self.pub_iters[j])
-                    anchor = self._anchor_fn(self.server_llm, dict(
-                        pub, modality_mask=jnp.ones_like(pub["modality_mask"]),
-                        modality_feats=pub["modality_feats"]))
-                    p, o, _ = self._dev_ccl_step(p, o, pub, anchor)
-            gref = self.last_global if cfg.prox_weight > 0 else None
-            for _ in range(cfg.local_steps_amt):
-                p, o, _ = self._dev_amt_step(p, o, next(self.priv_iters[j]),
-                                             None, gref)
-            self._device_params[j], self._device_opt[j] = p, o
-            uploads.append(lora.partition(p, lora.is_lora_leaf))
+        # (2) device side: CCL then AMT, cohort by cohort
+        uploads: List[List[Dict]] = []
+        for rt in self._cohorts:
+            ups = []
+            for i in range(rt.n):
+                p, o = rt.device_params[i], rt.device_opt[i]
+                if _do_ccl(cfg):
+                    for _ in range(cfg.local_steps_ccl):
+                        pub = next(rt.pub_iters[i])
+                        anchor = self._anchor_fn(self.server_llm, dict(
+                            pub,
+                            modality_mask=jnp.ones_like(pub["modality_mask"]),
+                            modality_feats=pub["modality_feats"]))
+                        p, o, _ = rt.dev_ccl_step(p, o, pub, anchor)
+                gref = rt.last_global if cfg.prox_weight > 0 else None
+                for _ in range(cfg.local_steps_amt):
+                    p, o, _ = rt.dev_amt_step(p, o, next(rt.priv_iters[i]),
+                                              None, gref)
+                rt.device_params[i], rt.device_opt[i] = p, o
+                ups.append(lora.partition(p, lora.is_lora_leaf))
+            uploads.append(ups)
 
         client_eval = self._evaluate_clients() if evaluate else None
 
@@ -787,16 +1133,26 @@ class FederatedRunner:
         # uniform-vs-MMA gating cannot diverge.  The scan-ordered reduction
         # matters: a plain eager sum rounds differently (FMA contraction)
         # at bf16 ULP scale, which training then amplifies past the
-        # engines' 1e-5 agreement.
-        agg = mma.aggregate_stacked(lora.StackedClients.stack(uploads),
-                                    self._agg_weights)
+        # engines' 1e-5 agreement.  Cross-cohort, the same
+        # partials-then-combine sequence as the fused round runs eagerly.
+        if self._homogeneous:
+            agg = mma.aggregate_stacked(
+                lora.StackedClients.stack(uploads[0]), self._agg_weights)
+            own_avgs: Tuple[Dict, ...] = ({},)
+        else:
+            agg, own_avgs = self._combine_payloads([
+                mma.partial_aggregate_stacked(
+                    lora.StackedClients.stack(ups), rt.weights)
+                for rt, ups in zip(self._cohorts, uploads)])
 
         if cfg.mode == "fedavg":
             # Multi-FedAvg: broadcast the average straight back
-            self.last_global = agg
-            for j in range(cfg.n_devices):
-                self._device_params[j] = lora.combine(
-                    self._device_params[j], agg)
+            for c, rt in enumerate(self._cohorts):
+                delivery = self._cohort_delivery(rt, agg, own_avgs[c])
+                rt.last_global = delivery
+                for i in range(rt.n):
+                    rt.device_params[i] = lora.combine(rt.device_params[i],
+                                                       delivery)
             return self._finalize_eval(client_eval) if evaluate else {}
 
         self.server_slm = lora.combine(self.server_slm, agg)
@@ -813,12 +1169,15 @@ class FederatedRunner:
                     self.server_llm, self.server_slm,
                     self.server_llm_opt, self.server_slm_opt, batch)
 
-        # (5) redistribute server-SLM LoRA to devices
+        # (5) redistribute the server-SLM LoRA: shared subset from the
+        # server, cohort-local keys from the intra-cohort average
         down = lora.partition(self.server_slm, lora.is_lora_leaf)
-        self.last_global = down
-        for j in range(cfg.n_devices):
-            self._device_params[j] = lora.combine(self._device_params[j],
-                                                  down)
+        for c, rt in enumerate(self._cohorts):
+            delivery = self._cohort_delivery(rt, down, own_avgs[c])
+            rt.last_global = delivery
+            for i in range(rt.n):
+                rt.device_params[i] = lora.combine(rt.device_params[i],
+                                                   delivery)
         return self._finalize_eval(client_eval) if evaluate else {}
 
     # ------------------------------------------------------------------
@@ -828,26 +1187,28 @@ class FederatedRunner:
         measure enqueue).  Under the overlap engine the critical path is
         the device side only — the server chain is deliberately pipelined
         off it; use :meth:`drain` to block on everything."""
+        state = tuple((rt.stacked_params, rt.stacked_opt)
+                      if self._stacked else tuple(rt.device_params)
+                      for rt in self._cohorts)
         if self.engine == "overlap":
-            jax.block_until_ready((self.stacked_params, self.stacked_opt))
+            jax.block_until_ready(state)
             return self
-        state = (self.stacked_params if self._stacked
-                 else self._device_params)
         jax.block_until_ready((state, self.server_llm, self.server_slm))
         return self
 
     # ------------------------------------------------------------------
     def drain(self) -> "FederatedRunner":
-        """Block until ALL in-flight work has materialized — device state,
-        the server chain, and any pipelined server outputs not yet applied
-        to the clients.  The overlap engine's full-state barrier (a
-        superset of :meth:`sync`); cheap and equivalent to :meth:`sync` for
-        the other engines."""
-        state = (self.stacked_params if self._stacked
-                 else self._device_params)
+        """Block until ALL in-flight work has materialized — every
+        cohort's device state, the server chain, and any pipelined server
+        outputs not yet applied to the clients.  The overlap engine's
+        full-state barrier (a superset of :meth:`sync`); cheap and
+        equivalent to :meth:`sync` for the other engines."""
+        state = tuple((rt.stacked_params if self._stacked
+                       else tuple(rt.device_params), rt.last_global)
+                      for rt in self._cohorts)
         pending = list(getattr(self, "_srv_q", ()))
         jax.block_until_ready((state, self.server_llm, self.server_slm,
-                               self.last_global, pending))
+                               pending))
         return self
 
     # ------------------------------------------------------------------
@@ -867,53 +1228,61 @@ class FederatedRunner:
         return self.history
 
     # ------------------------------------------------------------------
-    # evaluation — one metric definition (seccl.make_eval_step) under both
+    # evaluation — one metric definition (seccl.make_eval_step) under all
     # engines; see the module docstring for the engine contract
 
-    def _evaluate_clients(self, stacked_params=None) -> List[Dict]:
-        """Per-device test metrics on the current (or given stacked) device
-        models.  Vectorized: one jitted scan-over-vmap over the padded eval
+    def _evaluate_clients(self, post_amt=None) -> List[Dict]:
+        """Per-device test metrics in global client order, on the current
+        (or the given per-cohort post-AMT stacked) device models.
+        Stacked: one jitted scan-over-vmap per cohort over its padded eval
         shards; loop: reference host loop, one device at a time."""
         if self._stacked:
-            sp = (stacked_params if stacked_params is not None
-                  else self.stacked_params)
-            sums = self._client_eval_fn(sp, self._client_eval_steps)
-            host = {k: np.asarray(v) for k, v in sums.items()}
-            return [seccl.metrics_from_sums(
-                        {k: host[k][j] for k in host})
-                    for j in range(self.cfg.n_devices)]
-        return [self._eval_model(self._device_params[j], self.slm,
-                                 self.priv_test[j], self.masks[j])
-                for j in range(self.cfg.n_devices)]
+            out = []
+            for c, rt in enumerate(self._cohorts):
+                sp = post_amt[c] if post_amt is not None \
+                    else rt.stacked_params
+                sums = rt.client_eval_fn(sp, rt.eval_steps)
+                host = {k: np.asarray(v) for k, v in sums.items()}
+                out.extend(
+                    seccl.metrics_from_sums({k: host[k][i] for k in host})
+                    for i in range(rt.n))
+            return out
+        return [self._eval_model(rt.eval_step, rt.device_params[i],
+                                 self.priv_test[rt.offset + i],
+                                 self.masks[rt.offset + i])
+                for rt in self._cohorts for i in range(rt.n)]
 
     def _eval_server(self) -> Dict:
         """Server (cloud LLM) metrics on the public test set — the SE-CCL
-        evaluation.  N-independent; the vectorized engine runs it as one
+        evaluation.  N-independent; the stacked engines run it as one
         jitted scan so it cannot dominate small-N rounds."""
         if self._stacked:
             return seccl.metrics_from_sums(self._server_eval_fn(
                 self.server_llm, self._server_eval_steps))
-        return self._eval_model(self.server_llm, self.llm,
+        return self._eval_model(self._llm_eval_step, self.server_llm,
                                 self.public_test, None)
 
     def refresh_eval_shards(self) -> None:
-        """(Re)build the vectorized engine's precomputed eval stacks from
-        the CURRENT ``priv_test`` / ``public_test``.  The shards are
-        snapshotted for reuse across rounds, so after mutating a test set
-        call this — otherwise the stacked engines would keep evaluating
+        """(Re)build the stacked engines' precomputed eval stacks from the
+        CURRENT ``priv_test`` / ``public_test`` (per cohort).  The shards
+        are snapshotted for reuse across rounds, so after mutating a test
+        set call this — otherwise the stacked engines would keep evaluating
         the stale snapshot while the loop engine (which reads the
         attributes live) sees the new data.  No-op on the loop engine."""
         if not self._stacked:
             return
         bs = self.cfg.batch_size
-        self._client_eval_steps = stack_eval_steps(
-            stacked_eval_batches(self.priv_test, bs, self.masks))
+        for rt in self._cohorts:
+            sl = rt.slice
+            rt.eval_steps = stack_eval_steps(
+                stacked_eval_batches(self.priv_test[sl], bs, self.masks[sl]))
+            m = self._mesh_for(rt.idx)
+            if m is not None:
+                rt.eval_steps = jax.device_put(
+                    rt.eval_steps, shard_part.stacked_eval_shardings(
+                        rt.eval_steps, m, TRAIN_RULES))
         self._server_eval_steps = stack_eval_steps(
             np_eval_batches(self.public_test, bs))
-        if self.mesh is not None:
-            self._client_eval_steps = jax.device_put(
-                self._client_eval_steps, shard_part.stacked_eval_shardings(
-                    self._client_eval_steps, self.mesh, TRAIN_RULES))
         if self.engine == "overlap":
             # the server evaluates itself where its chain lives
             self._server_eval_steps = jax.device_put(
@@ -925,7 +1294,7 @@ class FederatedRunner:
 
     def evaluate_clients(self) -> List[Dict]:
         """Public API: per-device ``{"ce", "acc"}`` on each private test
-        set, using the engine's native eval path."""
+        set (global client order), using the engine's native eval path."""
         return self._evaluate_clients()
 
     def evaluate_server(self) -> Dict:
@@ -960,13 +1329,12 @@ class FederatedRunner:
         (:meth:`_finalize_eval`)."""
         return self._finalize_eval()
 
-    def _eval_model(self, params, bundle: ModelBundle, data, mask) -> Dict:
+    def _eval_model(self, step, params, data, mask) -> Dict:
         """Reference evaluation of one model: host loop over padded
         ``eval_batches``, accumulating the jitted per-batch masked sums
         (``seccl.make_eval_step``) in f32 — the same sequential addition
-        order as the vectorized engine's scan, so the engines agree to
-        float rounding."""
-        step = self._eval_steps_jit["slm" if bundle is self.slm else "llm"]
+        order as the stacked engines' scan, so the engines agree to float
+        rounding."""
         sums = {k: np.float32(0.0) for k in seccl.EVAL_SUM_KEYS}
         for batch in eval_batches(data, self.cfg.batch_size, mask):
             out = jax.device_get(step(params, batch))

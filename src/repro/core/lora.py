@@ -63,10 +63,25 @@ def partition(params, predicate: Callable[[str], bool] = default_trainable
 
 
 def combine(params, trainable: Dict[str, jnp.ndarray]):
-    """Re-insert trainable leaves into the full parameter tree."""
+    """Re-insert trainable leaves into the full parameter tree.
+
+    ``trainable`` may be a *partial* dict (e.g. a heterogeneous cohort's
+    shared-subset delivery): leaves without an entry pass through
+    untouched.
+    """
     def pick(path, leaf):
         return trainable.get(path_str(path), leaf)
     return jax.tree_util.tree_map_with_path(pick, params)
+
+
+def shared_keys(a: Dict[str, jnp.ndarray], b: Dict[str, jnp.ndarray]
+                ) -> Tuple[str, ...]:
+    """Keys present in BOTH flat dicts with identical shape and dtype —
+    the cross-architecture exchange subset of the cohort API (aggregating
+    mismatched shapes is undefined; mismatched keys stay cohort-local)."""
+    return tuple(sorted(
+        k for k, v in a.items()
+        if k in b and b[k].shape == v.shape and b[k].dtype == v.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,17 @@
 """MMA — modality-aware model aggregation (§3.3, Eq. 13).
 
-Two forms:
+Three forms:
   * host-level: weighted average of uploaded LoRA flat-dicts (the federated
     simulator / true edge deployment);
   * SPMD form: per-example modality counts become weights in the gradient
     all-reduce of the distributed train step (mathematically identical when
-    clients map to data-parallel subgroups).
+    clients map to data-parallel subgroups);
+  * cohort form: under model-structure heterogeneity
+    (:mod:`repro.core.spec`), each cohort scans its own ragged-size client
+    stack into f32 partial sums (:func:`partial_aggregate_stacked`) and
+    the cross-architecture combine happens on the shared-shape key subset
+    only (:func:`combine_cohort_partials`) — Eq. 13 with globally
+    normalized weights, renormalized per key by the participating mass.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def aggregation_weights(n_modalities: Sequence[int]) -> jnp.ndarray:
@@ -35,6 +42,30 @@ def aggregate(uploads: List[Dict[str, jnp.ndarray]],
     return out
 
 
+def partial_aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
+    """Unnormalized f32 partial sums of Eq. 13 over the device axis.
+
+    The intra-cohort half of cross-cohort aggregation: with *globally*
+    normalized weights ``w_j`` this returns ``P[k] = Σ_j w_j · u_j[k]`` in
+    f32, left-to-right scan order, WITHOUT the final dtype cast — so
+    cohort partials can be summed across cohorts (on the shared-shape key
+    subset) and normalized once by the participating weight mass (see
+    :func:`combine_cohort_partials`).  :func:`aggregate_stacked` is this
+    plus the cast.
+    """
+    flat = getattr(uploads, "trainable", uploads)
+    weights = jnp.asarray(weights, jnp.float32)
+
+    def body(acc, wv):
+        w, v = wv
+        acc = {k: acc[k] + w * v[k].astype(jnp.float32) for k in acc}
+        return acc, None
+
+    init = {k: jnp.zeros(v.shape[1:], jnp.float32) for k, v in flat.items()}
+    acc, _ = jax.lax.scan(body, init, (weights, flat))
+    return acc
+
+
 def aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
     """Eq. 13 over a device-stacked upload set — jit/vmap friendly.
 
@@ -49,16 +80,44 @@ def aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
     depth to matter.
     """
     flat = getattr(uploads, "trainable", uploads)
-    weights = jnp.asarray(weights, jnp.float32)
-
-    def body(acc, wv):
-        w, v = wv
-        acc = {k: acc[k] + w * v[k].astype(jnp.float32) for k in acc}
-        return acc, None
-
-    init = {k: jnp.zeros(v.shape[1:], jnp.float32) for k, v in flat.items()}
-    acc, _ = jax.lax.scan(body, init, (weights, flat))
+    acc = partial_aggregate_stacked(flat, weights)
     return {k: acc[k].astype(flat[k].dtype) for k in flat}
+
+
+def combine_cohort_partials(partials: Sequence[Dict[str, jnp.ndarray]],
+                            shared_keys: Sequence[Sequence[str]],
+                            w_totals: Sequence[float],
+                            out_dtypes: Dict) -> Dict[str, jnp.ndarray]:
+    """Cross-cohort Eq. 13 on the shared-shape key subset.
+
+    ``partials[c]`` are cohort ``c``'s f32 partial sums
+    (:func:`partial_aggregate_stacked` under globally normalized weights),
+    ``shared_keys[c]`` the server-shape-matching keys it exchanges, and
+    ``w_totals[c]`` its weight mass ``W_c = Σ_{j∈c} w_j``.  For each key
+    the participating cohorts' partials are summed *in cohort order*
+    (deterministic — the loop and stacked engines execute the identical
+    sequence) and renormalized by the participating mass, so keys shared
+    by only a subset of cohorts still receive a convex combination:
+
+        agg[k] = ( Σ_{c: k shared} P_c[k] ) / ( Σ_{c: k shared} W_c )
+
+    With one cohort holding every key this reduces to the plain global
+    Eq. 13 aggregate.  ``out_dtypes`` maps keys to the server-side leaf
+    dtype for the final cast.
+    """
+    participants: Dict[str, list] = {}
+    for c, ks in enumerate(shared_keys):
+        for k in ks:
+            participants.setdefault(k, []).append(c)
+    out = {}
+    for k in sorted(participants):
+        cs = participants[k]
+        acc = partials[cs[0]][k]
+        for c in cs[1:]:
+            acc = acc + partials[c][k]
+        mass = np.float32(sum(float(w_totals[c]) for c in cs))
+        out[k] = (acc / mass).astype(out_dtypes[k])
+    return out
 
 
 def mma_psum_weights(modality_counts, axis_names):

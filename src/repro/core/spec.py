@@ -1,0 +1,284 @@
+"""FederationSpec — the declarative, cohort-based description of an ML-ECS
+federation (model-structure heterogeneity as a first-class workload).
+
+The paper's headline challenge is *model-structure heterogeneity*: different
+edge domains deploy different modality-specific encoders / fusion modules /
+backbones.  The legacy constructor
+(``FederatedRunner(cfg, slm_bundle, llm_bundle, corpus)``) hard-coded ONE
+client architecture for all N devices, so every expressible experiment was
+architecturally homogeneous.  This module replaces that surface with two
+frozen dataclasses:
+
+* :class:`ClientCohort` — ``n_clients`` edge devices sharing ONE
+  :class:`~repro.configs.base.ModelConfig`, an optional modality subset,
+  an optional per-cohort MER ``rho``, and an optional private-data
+  fraction.  Intra-cohort homogeneity is the *documented invariant* that
+  makes the cohort vectorizable (``jax.vmap`` needs one trace), instead of
+  a global limitation of the runner.
+* :class:`FederationSpec` — an ordered tuple of cohorts + the server LLM
+  (and optionally a distinct server-side SLM) + every protocol
+  hyperparameter that used to live in ``FederatedConfig``.
+
+Cross-cohort aggregation is well-defined on the **shared subset**: the
+LoRA(+connector) leaves whose path *and shape* match between a cohort's SLM
+and the server SLM — exactly the parameter set the paper says crosses the
+edge-cloud boundary (≈0.65 % of volume).  Cohort-specific adapters (shape
+mismatch, e.g. a different ``d_model``) federate *within* their cohort
+only.  A single-cohort spec built by :meth:`FederationSpec.from_legacy`
+reproduces the legacy runner bit-for-bit: every key is shared, the MER
+draw, shuffle streams and init keys use the same seed schedule.
+
+Validation (the config-gating bugfix): unknown ``mode`` / ``engine`` /
+``ccl_score`` strings and ``staleness > 0`` outside the overlap engine are
+rejected at construction — an unknown ``mode`` used to silently pass the
+``_do_seccl`` gate and behave like a fourth mlecs-like mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+MODES = ("mlecs", "standalone", "fedavg")
+ENGINES = ("loop", "vectorized", "overlap")
+CCL_SCORES = ("volume", "cosine")
+
+# per-cohort MER mask streams: cohort c draws from seed + c * _MASK_SEED_STRIDE
+# (cohort 0 uses the spec seed itself, so single-cohort specs reproduce the
+# legacy runner's mer_partition(cfg.seed, ...) draw bit-for-bit)
+_MASK_SEED_STRIDE = 7919
+
+
+def validate_protocol(mode: str, engine: str, ccl_score: str,
+                      staleness: int) -> None:
+    """Reject invalid protocol knobs at construction time.
+
+    An unknown ``mode`` is the dangerous one: it silently passes the
+    ``mode not in ("standalone", "fedavg")`` gate inside ``_do_seccl`` and
+    behaves like an undocumented fourth mlecs-like mode; unknown
+    ``engine`` / ``ccl_score`` fail later and further from the typo.
+    ``staleness > 0`` is meaningless outside the overlap engine (the other
+    engines have no pipeline to lag) and used to be ignored silently.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected one of {ENGINES}")
+    if ccl_score not in CCL_SCORES:
+        raise ValueError(
+            f"unknown ccl_score {ccl_score!r}; expected one of {CCL_SCORES}")
+    if staleness < 0:
+        raise ValueError("staleness must be >= 0")
+    if staleness > 0 and engine != "overlap":
+        raise ValueError(
+            f"staleness={staleness} requires engine='overlap' (the other "
+            "engines have no pipeline to lag); got engine=" + repr(engine))
+
+
+def _cdim(cfg: ModelConfig) -> int:
+    """The connector's shared latent width (one rule, owned by
+    :func:`repro.core.connector.latent_dim`)."""
+    from repro.core.connector import latent_dim
+    return latent_dim(cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientCohort:
+    """``n_clients`` edge devices sharing one model architecture.
+
+    ``modalities`` (optional) restricts the cohort to a subset of the
+    global modality ids — the MER Bernoulli draw then composes with the
+    subset (absent modalities are never drawn, and the ≥1-modality
+    guarantee is satisfied *within* the subset).  ``rho`` (optional)
+    overrides the federation-level MER for this cohort.
+    ``data_fraction`` keeps only that fraction of each member's private
+    shard (a per-cohort data slice; 1.0 = the full legacy shard).
+    """
+
+    model: ModelConfig
+    n_clients: int = 1
+    name: str = ""
+    modalities: Optional[Tuple[int, ...]] = None
+    rho: Optional[float] = None
+    data_fraction: float = 1.0
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError("n_clients must be >= 1")
+        if not (0.0 < self.data_fraction <= 1.0):
+            raise ValueError("data_fraction must be in (0, 1]")
+        if self.rho is not None and not (0.0 <= self.rho <= 1.0):
+            raise ValueError("rho must be in [0, 1]")
+        if self.modalities is not None:
+            mods = tuple(int(m) for m in self.modalities)
+            if not mods:
+                raise ValueError("modalities subset must be non-empty "
+                                 "(use None for all modalities)")
+            if len(set(mods)) != len(mods) or min(mods) < 0:
+                raise ValueError(f"bad modality subset {mods}")
+            if self.model.n_modalities and max(mods) >= self.model.n_modalities:
+                raise ValueError(
+                    f"modality id {max(mods)} out of range for "
+                    f"n_modalities={self.model.n_modalities}")
+            object.__setattr__(self, "modalities", mods)
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationSpec:
+    """A whole federation, declaratively: cohorts + server + protocol.
+
+    Subsumes the legacy ``FederatedConfig`` (every protocol field below
+    mirrors it); ``n_devices`` becomes the derived sum of cohort sizes.
+    ``server_slm`` defaults to the first cohort's model — the aggregation
+    target on the cloud; its shape-shared LoRA subset with each cohort
+    defines what crosses the edge-cloud boundary.
+    """
+
+    cohorts: Tuple[ClientCohort, ...]
+    server_llm: ModelConfig
+    server_slm: Optional[ModelConfig] = None
+
+    # protocol hyperparameters (the legacy FederatedConfig surface)
+    rounds: int = 5
+    local_steps_ccl: int = 4
+    local_steps_amt: int = 4
+    server_steps: int = 4
+    batch_size: int = 8
+    lr: float = 3e-3
+    rho: float = 0.7                 # default MER (cohorts may override)
+    n_negatives: int = 4
+    seed: int = 0
+    engine: str = "vectorized"
+    staleness: int = 0
+    use_mma: bool = True
+    use_seccl: bool = True
+    use_ccl: bool = True
+    mode: str = "mlecs"
+    kt_weight: float = 0.5
+    prox_weight: float = 0.0
+    ccl_score: str = "volume"
+
+    def __post_init__(self):
+        cohorts = tuple(self.cohorts)
+        if not cohorts:
+            raise ValueError("FederationSpec needs at least one cohort")
+        object.__setattr__(self, "cohorts", cohorts)
+        validate_protocol(self.mode, self.engine, self.ccl_score,
+                          self.staleness)
+        if not (0.0 <= self.rho <= 1.0):
+            raise ValueError("rho must be in [0, 1]")
+        # anchored CCL and cross-cohort aggregation need ONE connector
+        # latent space: every cohort SLM, the server SLM and the server LLM
+        # must agree on the modality interface (the paper's "unified latent
+        # space shared across all devices").  Backbones are free to differ.
+        models = [c.model for c in cohorts] + [self.server_llm,
+                                               self.resolved_server_slm]
+        if any(m.n_modalities > 0 for m in models):
+            iface = {(m.n_modalities, m.modality_dim, _cdim(m))
+                     for m in models}
+            if len(iface) != 1:
+                raise ValueError(
+                    "cohort/server models disagree on the connector "
+                    f"interface (n_modalities, modality_dim, latent): "
+                    f"{sorted(iface)}")
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_server_slm(self) -> ModelConfig:
+        """The server-side SLM config (defaults to cohort 0's model)."""
+        return self.server_slm if self.server_slm is not None \
+            else self.cohorts[0].model
+
+    @property
+    def n_cohorts(self) -> int:
+        return len(self.cohorts)
+
+    @property
+    def n_devices(self) -> int:
+        """Total client count across cohorts (the legacy ``n_devices``)."""
+        return sum(c.n_clients for c in self.cohorts)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        """Global client index of each cohort's first member."""
+        out, acc = [], 0
+        for c in self.cohorts:
+            out.append(acc)
+            acc += c.n_clients
+        return tuple(out)
+
+    def cohort_of(self, j: int) -> int:
+        """Cohort index owning global client ``j``."""
+        for c, off in enumerate(self.offsets):
+            if off <= j < off + self.cohorts[c].n_clients:
+                return c
+        raise IndexError(j)
+
+    def cohort_rho(self, c: int) -> float:
+        return self.cohorts[c].rho if self.cohorts[c].rho is not None \
+            else self.rho
+
+    def mask_seed(self, c: int) -> int:
+        """Seed of cohort ``c``'s MER draw (cohort 0 = the spec seed, so
+        single-cohort specs replay the legacy global draw exactly)."""
+        return self.seed + _MASK_SEED_STRIDE * c
+
+    def modality_subset(self, c: int, n_modalities: int
+                        ) -> Optional[np.ndarray]:
+        """Cohort ``c``'s allowed-modality bool vector (None = all)."""
+        mods = self.cohorts[c].modalities
+        if mods is None:
+            return None
+        if max(mods) >= n_modalities:
+            raise ValueError(
+                f"cohort {c} modality subset {mods} out of range for the "
+                f"corpus' {n_modalities} modalities")
+        allowed = np.zeros(n_modalities, bool)
+        allowed[list(mods)] = True
+        return allowed
+
+    def draw_masks(self, n_modalities: int) -> np.ndarray:
+        """(n_devices, n_modalities) MER availability masks, cohort-wise:
+        cohort ``c`` draws ``mer_partition(mask_seed(c), ...)`` at its own
+        ``rho`` restricted to its modality subset.  Seed-deterministic;
+        one unrestricted cohort reproduces the legacy draw bit-for-bit."""
+        from repro.data.multimodal import mer_partition
+        parts = [
+            mer_partition(self.mask_seed(c), coh.n_clients, n_modalities,
+                          self.cohort_rho(c),
+                          allowed=self.modality_subset(c, n_modalities))
+            for c, coh in enumerate(self.cohorts)]
+        return np.concatenate(parts, axis=0)
+
+    # ------------------------------------------------------------------
+    def to_config(self):
+        """The derived legacy view (a ``FederatedConfig`` with
+        ``n_devices = sum of cohort sizes``) — what ``runner.cfg`` holds."""
+        from repro.core.federated import FederatedConfig
+        return FederatedConfig(
+            n_devices=self.n_devices,
+            **{f: getattr(self, f) for f in _PROTOCOL_FIELDS})
+
+    @classmethod
+    def from_legacy(cls, cfg, slm_cfg: ModelConfig, llm_cfg: ModelConfig
+                    ) -> "FederationSpec":
+        """One homogeneous cohort of ``cfg.n_devices`` clients — the exact
+        semantics of the legacy constructor, reproduced bit-for-bit (same
+        init keys, MER draw, shuffle-stream seeds, and a cross-cohort
+        shared subset that covers every LoRA key)."""
+        return cls(
+            cohorts=(ClientCohort(model=slm_cfg, n_clients=cfg.n_devices,
+                                  name="legacy"),),
+            server_llm=llm_cfg,
+            **{f: getattr(cfg, f) for f in _PROTOCOL_FIELDS})
+
+
+_PROTOCOL_FIELDS = (
+    "rounds", "local_steps_ccl", "local_steps_amt", "server_steps",
+    "batch_size", "lr", "rho", "n_negatives", "seed", "engine", "staleness",
+    "use_mma", "use_seccl", "use_ccl", "mode", "kt_weight", "prox_weight",
+    "ccl_score")

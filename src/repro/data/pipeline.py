@@ -13,7 +13,12 @@ Three shapes of iterator:
   ``(N, B, ...)`` batches for the vectorized engine.  Each device keeps its
   *own* shuffle stream (train) or in-order shard (eval), bit-identical to N
   independent per-device iterators, so the loop and vectorized engines
-  consume identical data and stay numerically comparable.
+  consume identical data and stay numerically comparable.  Under the
+  cohort API (:mod:`repro.core.spec`) every cohort owns one such stacked
+  iterator over its contiguous global-client slice, seeded by GLOBAL
+  client index — concatenating the cohorts' sub-streams replays the flat
+  single-cohort streams exactly, so cohort boundaries never perturb the
+  data a client sees.
 
 :func:`stack_steps` (infinite train iterators) and
 :func:`stack_eval_steps` (finite eval iterators) add a leading step axis so

@@ -63,6 +63,39 @@ def make_federated_mesh(n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_cohort_meshes(n_cohorts: int, n_model: int = 1):
+    """Disjoint per-cohort meshes for heterogeneous federations (the
+    overlap engine's ``mesh=[...]`` form).
+
+    Differently-shaped cohorts cannot share one ``vmap`` trace, so placing
+    each cohort on its own device slice lets their device phases execute
+    *concurrently* via async dispatch instead of serializing on one chip
+    set.  The local devices are split evenly, leading cohorts taking the
+    remainder; each slice becomes a ("data", "model") mesh whose "data"
+    axis carries that cohort's stacked clients (``n_model`` is clamped to
+    the slice size, and a slice that is not a multiple of ``n_model``
+    drops its tail devices — mesh shapes must be rectangular).  With fewer
+    devices than cohorts the surplus cohorts share the last device
+    (degenerate (1, 1) meshes) — still correct, no cohort parallelism.
+    """
+    import numpy as np
+    devs = jax.devices()
+    base, rem = divmod(len(devs), n_cohorts)
+    meshes, lo = [], 0
+    for c in range(n_cohorts):
+        take = base + (1 if c < rem else 0)
+        if take == 0:               # more cohorts than devices
+            sl = [devs[-1]]
+        else:
+            sl = devs[lo:lo + take]
+            lo += take
+        nm = max(1, min(n_model, len(sl)))
+        n_data = len(sl) // nm
+        arr = np.array(sl[:n_data * nm]).reshape(n_data, nm)
+        meshes.append(jax.sharding.Mesh(arr, ("data", "model")))
+    return meshes
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -17,8 +17,7 @@ from repro.sharding.partition import param_pspecs
 from repro.sharding.rules import Rules
 
 
-def _cdim(cfg: ModelConfig) -> int:
-    return cfg.connector_dim or cfg.d_model
+from repro.core.connector import latent_dim as _cdim
 
 
 def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:

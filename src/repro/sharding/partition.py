@@ -123,11 +123,15 @@ def stacked_client_shardings(tree, mesh: Mesh, rules: Rules, axis: int = 0):
     pytrees, 1 for (steps, N, B, ...) pre-batched round data).  Specs are
     sanitized per leaf, so an N that doesn't divide the data axis degrades
     to replication — the single-device host mesh is always exact.  Used by
-    both stacked federated engines; the overlap engine applies the axis=1
-    form from its prefetch worker so the 8-way round-data distribution
-    happens off the critical path.  Validated across real device
-    boundaries under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-    (the multidevice CI job).
+    both stacked federated engines, once per *cohort* under the
+    FederationSpec API: each cohort's stack is placed on its own mesh's
+    "data" axis (a shared mesh, or a disjoint per-cohort mesh from
+    ``launch.mesh.make_cohort_meshes``); the overlap engine applies the
+    axis=1 form from its prefetch worker so the 8-way round-data
+    distribution happens off the critical path.  Validated across real
+    device boundaries under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+    multidevice CI job).
     """
     entry = rules.axis("device")
 

@@ -1,9 +1,11 @@
 """Loop vs. vectorized vs. overlap federated engines: numerical equivalence
-(train AND eval), overlap staleness semantics, the shared SE-CCL gating
+(train AND eval) in the homogeneous AND heterogeneous-cohort cases, the
+FederationSpec.from_legacy bit-for-bit contract, overlap staleness
+semantics (incl. staleness > 1 convergence), the shared SE-CCL gating
 predicate, multi-device mesh validation (under a forced 8-device host
-platform), plus unit tests for the device-stacked representations
-(StackedClients, stacked MMA, stacked batch iterators, padded eval shards,
-client-axis sharding, round prefetching)."""
+platform, shared and per-cohort meshes), plus unit tests for the
+device-stacked representations (StackedClients, stacked MMA, stacked batch
+iterators, padded eval shards, client-axis sharding, round prefetching)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +15,7 @@ from repro.configs.base import ModelConfig
 from repro.core import lora, mma, seccl
 from repro.core.federated import (FederatedConfig, FederatedRunner, _do_ccl,
                                   _do_seccl)
+from repro.core.spec import ClientCohort, FederationSpec
 from repro.data.pipeline import (RoundPrefetcher, batches, eval_batches,
                                  np_eval_batches, stack_eval_steps,
                                  stack_steps, stacked_batches,
@@ -136,6 +139,234 @@ def test_engines_match_standalone(corpus):
     ov.close()
     _assert_summaries_match(s_loop, s_vec)
     _assert_summaries_match(s_vec, s_ov)
+
+
+# ---------------------------------------------------------------------------
+# cohort API (FederationSpec): legacy bit-for-bit shim + heterogeneous
+# federations (different d_model, disjoint modality subsets)
+
+_HKW = dict(n_modalities=3, modality_dim=32, n_soft_tokens=4,
+            connector_dim=48, lora_rank=4, remat=False, activation="gelu",
+            vocab_size=128)
+
+
+def _het_spec(engine, n_a=2, n_b=2, **kw):
+    """Two-cohort heterogeneous spec: different d_model/d_ff backbones and
+    DISJOINT modality subsets (cohort B additionally overrides rho)."""
+    slm_a = ModelConfig(name="coh-a", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=8, d_ff=64, **_HKW)
+    slm_b = ModelConfig(name="coh-b", family="dense", n_layers=1, d_model=48,
+                        n_heads=2, n_kv_heads=2, head_dim=8, d_ff=96, **_HKW)
+    llm = ModelConfig(name="coh-llm", family="dense", n_layers=1, d_model=64,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=96, **_HKW)
+    base = dict(rounds=2, local_steps_ccl=1, local_steps_amt=1,
+                server_steps=1, batch_size=8, lr=1e-2, rho=0.7, seed=0)
+    base.update(kw)
+    return FederationSpec(
+        cohorts=(ClientCohort(model=slm_a, n_clients=n_a, name="A",
+                              modalities=(0, 1)),
+                 ClientCohort(model=slm_b, n_clients=n_b, name="B",
+                              modalities=(2,), rho=0.9)),
+        server_llm=llm, engine=engine, **base)
+
+
+def test_from_legacy_spec_is_bit_exact(corpus):
+    """The tentpole backward-compat contract: a runner built from
+    FederationSpec.from_legacy(...) matches the legacy constructor
+    EXACTLY (atol=0) on all three engines — same init keys, MER draw,
+    shuffle streams, and computation graph."""
+    slm, llm = _bundles()
+    for engine in ("loop", "vectorized", "overlap"):
+        cfg = FederatedConfig(engine=engine, n_devices=3, rounds=1,
+                              local_steps_ccl=2, local_steps_amt=2,
+                              server_steps=2, batch_size=8, lr=1e-2,
+                              rho=0.7, seed=0)
+        legacy = FederatedRunner(cfg, slm, llm, corpus)
+        spec = FederationSpec.from_legacy(cfg, slm.cfg, llm.cfg)
+        via_spec = FederatedRunner(spec, corpus)
+        np.testing.assert_array_equal(legacy.masks, via_spec.masks)
+        s_legacy = legacy.run_round()["summary"]
+        s_spec = via_spec.run_round()["summary"]
+        _assert_summaries_match(s_legacy, s_spec, atol=0.0)
+        if engine != "loop":
+            legacy.drain(), via_spec.drain()
+            _assert_lora_state_match(legacy, via_spec, atol=0.0)
+        legacy.close(), via_spec.close()
+
+
+def test_engines_agree_heterogeneous_cohorts(corpus):
+    """The heterogeneous acceptance criterion: a 2-cohort federation with
+    different d_model and disjoint modality subsets agrees loop vs
+    vectorized (and overlap at staleness=0) to <=1e-5 over two evaluated
+    rounds; the cross-cohort exchange happens on the shared-shape LoRA
+    subset only."""
+    runners = {e: FederatedRunner(_het_spec(e), corpus)
+               for e in ("loop", "vectorized", "overlap")}
+    # structural sanity: cohort A shares every key with the server SLM
+    # (same architecture), cohort B exchanges only the shape-matching
+    # subset and keeps its d_model-specific adapters cohort-local
+    for r in runners.values():
+        a, b = r.cohorts
+        assert a.own == () and len(a.shared) > 0
+        assert len(b.own) > 0 and len(b.shared) > 0
+        assert not r.masks[:2, 2].any() and not r.masks[2:, :2].any()
+    for _ in range(2):
+        summaries = {e: r.run_round()["summary"]
+                     for e, r in runners.items()}
+        _assert_summaries_match(summaries["loop"], summaries["vectorized"])
+        _assert_summaries_match(summaries["vectorized"],
+                                summaries["overlap"])
+    # per-cohort stacked state agrees between the stacked engines
+    runners["overlap"].drain()
+    for c in range(2):
+        a = lora.partition(runners["vectorized"].cohorts[c].stacked_params,
+                           lora.is_lora_leaf)
+        b = lora.partition(runners["overlap"].cohorts[c].stacked_params,
+                           lora.is_lora_leaf)
+        for k in a:
+            np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                       rtol=0, atol=1e-5, err_msg=k)
+    # the global client list spans both cohorts in global order
+    ev = runners["vectorized"].evaluate()
+    assert len(ev["client"]) == 4
+    runners["overlap"].close()
+
+
+def test_staleness2_warmup_and_convergence(corpus):
+    """ROADMAP open item: staleness > 1 pipelines deeper.  A 2-cohort
+    overlap run at staleness=2 must (a) skip redistribution during the 2
+    warm-up rounds as documented (the pending-output queue fills to
+    staleness, intra-cohort client states stay distinct), then (b) apply
+    deliveries with a 2-round lag, and (c) converge — the final evaluated
+    CE stays within tolerance of the staleness=1 schedule and improves on
+    the pre-training eval."""
+    def lora_rows_equal(r):
+        tr = lora.partition(r.cohorts[0].stacked_params, lora.is_lora_leaf)
+        return all(np.array_equal(np.asarray(v)[0], np.asarray(v)[1])
+                   for v in tr.values())
+
+    r2 = FederatedRunner(_het_spec("overlap", staleness=2, rounds=4), corpus)
+    pre = r2.evaluate()["summary"]["avg_ce"]
+    hist2 = []
+    for rnd in range(4):
+        hist2.append(r2.run_round()["summary"])
+        r2.drain()
+        if rnd < 2:     # warm-up: nothing redistributed yet
+            assert len(r2._srv_q) == rnd + 1
+            assert not lora_rows_equal(r2)
+        else:           # steady state: queue holds `staleness` outputs
+            assert len(r2._srv_q) == 2
+            assert lora_rows_equal(r2)
+    r2.close()
+
+    r1 = FederatedRunner(_het_spec("overlap", staleness=1, rounds=4), corpus)
+    hist1 = [r1.run_round()["summary"] for _ in range(4)]
+    r1.drain(), r1.close()
+
+    ce1, ce2 = hist1[-1]["avg_ce"], hist2[-1]["avg_ce"]
+    assert np.isfinite(ce1) and np.isfinite(ce2)
+    assert ce2 < pre, "staleness=2 must still improve on the initial model"
+    assert abs(ce2 - ce1) <= 0.25, (ce1, ce2)
+
+
+@needs_multidev
+def test_heterogeneous_cohorts_shard_on_shared_mesh(corpus):
+    """The acceptance criterion's sharded half: a 2-cohort heterogeneous
+    run REALLY shards under 8 forced host devices.  A shared (4, 2) mesh
+    places each cohort's 4-client stack on the 4-way data axis (the fused
+    jit cannot span disjoint device sets, so the vectorized engine uses
+    one shared mesh); summaries agree with the unsharded loop reference."""
+    from repro.launch.mesh import make_federated_mesh
+    mesh = make_federated_mesh(n_model=2)
+    assert mesh.devices.size == 8
+    loop = FederatedRunner(_het_spec("loop", n_a=4, n_b=4, rounds=1), corpus)
+    vec = FederatedRunner(_het_spec("vectorized", n_a=4, n_b=4, rounds=1),
+                          corpus, mesh=mesh)
+    for rt in vec.cohorts:
+        leaf = next(iter(lora.partition(rt.stacked_params,
+                                        lora.is_lora_leaf).values()))
+        assert len(leaf.sharding.device_set) > 1, \
+            "cohort stack must really shard across the mesh"
+    _assert_summaries_match(loop.run_round()["summary"],
+                            vec.run_round()["summary"])
+
+
+@needs_multidev
+def test_per_cohort_meshes_use_disjoint_devices(corpus):
+    """Per-cohort meshes (the overlap engine's mesh=[...] form): each
+    cohort's stack lives on its own disjoint device slice — heterogeneous
+    device phases can then run concurrently — and the pipelined run still
+    agrees with the loop reference."""
+    from repro.launch.mesh import make_cohort_meshes
+    meshes = make_cohort_meshes(2)
+    assert len(meshes) == 2
+    ov = FederatedRunner(_het_spec("overlap", n_a=4, n_b=4, rounds=1),
+                         corpus, mesh=meshes)
+    sets = []
+    for rt in ov.cohorts:
+        leaf = next(iter(lora.partition(rt.stacked_params,
+                                        lora.is_lora_leaf).values()))
+        sets.append(set(leaf.sharding.device_set))
+        assert len(leaf.sharding.device_set) > 1
+    assert not (sets[0] & sets[1]), "cohort device slices must be disjoint"
+    loop = FederatedRunner(_het_spec("loop", n_a=4, n_b=4, rounds=1), corpus)
+    _assert_summaries_match(loop.run_round()["summary"],
+                            ov.run_round()["summary"])
+    ov.drain()
+    ov.close()
+
+
+def test_single_cohort_partial_server_overlap(corpus):
+    """Regression: the homogeneous fast path used to be gated on cohort
+    COUNT, so a single cohort with a distinct (differently-shaped) server
+    SLM spliced the full cohort-shaped aggregate into the mismatched
+    server tree and crashed.  It must route through the shared-subset
+    machinery and keep the loop/vectorized agreement."""
+    slm = ModelConfig(name="pso-slm", family="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=8, d_ff=64, **_HKW)
+    srv = ModelConfig(name="pso-srv", family="dense", n_layers=1, d_model=48,
+                      n_heads=2, n_kv_heads=2, head_dim=8, d_ff=96, **_HKW)
+    llm = ModelConfig(name="pso-llm", family="dense", n_layers=1, d_model=64,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=96, **_HKW)
+
+    def mk(engine):
+        return FederatedRunner(FederationSpec(
+            cohorts=(ClientCohort(model=slm, n_clients=2),),
+            server_llm=llm, server_slm=srv, rounds=1, local_steps_ccl=1,
+            local_steps_amt=1, server_steps=1, batch_size=8, lr=1e-2,
+            rho=0.7, seed=0, engine=engine), corpus)
+
+    vec = mk("vectorized")
+    assert not vec._homogeneous
+    rt = vec.cohorts[0]
+    assert rt.own and rt.shared           # genuinely partial overlap
+    _assert_summaries_match(mk("loop").run_round()["summary"],
+                            vec.run_round()["summary"])
+
+
+def test_make_cohort_meshes_covers_devices_and_clamps():
+    """make_cohort_meshes must distribute remainder devices to leading
+    cohorts (no idle hardware) and clamp n_model to the slice size instead
+    of crashing on the reshape."""
+    from repro.launch.mesh import make_cohort_meshes
+    n = jax.device_count()
+    meshes = make_cohort_meshes(3)
+    assert len(meshes) == 3
+    used = set()
+    for m in meshes:
+        assert m.axis_names == ("data", "model")
+        used.update(m.devices.flat)
+    assert len(used) == n                 # every local device participates
+    for k in (1, 2):                      # n_model > slice size: clamp
+        for m in make_cohort_meshes(k, n_model=max(4, n + 1)):
+            assert m.devices.size >= 1
+
+
+def test_per_cohort_meshes_rejected_outside_overlap(corpus):
+    from repro.launch.mesh import make_host_mesh
+    meshes = [make_host_mesh(), make_host_mesh()]
+    with pytest.raises(ValueError, match="overlap"):
+        FederatedRunner(_het_spec("vectorized"), corpus, mesh=meshes)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,218 @@
+"""FederationSpec / ClientCohort validation, the config-gating bugfix
+(unknown mode/engine/ccl_score and out-of-engine staleness rejected at
+construction), MER-partition property tests (hypothesis-shim parametrized),
+and the cohort mask composition (modality subsets x the MER draw)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core.federated import FederatedConfig
+from repro.core.spec import ClientCohort, FederationSpec
+from repro.data.multimodal import mer_partition, take_fraction
+
+settings.register_profile("spec", max_examples=25, deadline=None)
+settings.load_profile("spec")
+
+_KW = dict(n_modalities=3, modality_dim=32, n_soft_tokens=4, connector_dim=48,
+           lora_rank=4, remat=False, activation="gelu", vocab_size=128)
+
+
+def _slm(d_model=32, **kw):
+    return ModelConfig(name=f"slm{d_model}", family="dense", n_layers=1,
+                       d_model=d_model, n_heads=2, n_kv_heads=2, head_dim=8,
+                       d_ff=2 * d_model, **{**_KW, **kw})
+
+
+def _llm():
+    return ModelConfig(name="llm", family="dense", n_layers=1, d_model=64,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=96, **_KW)
+
+
+def _spec(**kw):
+    base = dict(cohorts=(ClientCohort(model=_slm(), n_clients=2),),
+                server_llm=_llm())
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# the config-validation bugfix: unknown strings must fail loudly at
+# construction (an unknown mode used to silently pass the _do_seccl gate
+# and behave like a fourth mlecs-like mode)
+
+@pytest.mark.parametrize("field,value", [
+    ("mode", "ml-ecs"),           # the typo'd variant of "mlecs"
+    ("mode", "federated"),
+    ("engine", "vectorised"),
+    ("engine", "async"),
+    ("ccl_score", "euclidean"),
+])
+def test_federated_config_rejects_unknown_strings(field, value):
+    with pytest.raises(ValueError, match="unknown"):
+        FederatedConfig(**{field: value})
+    with pytest.raises(ValueError, match="unknown"):
+        _spec(**{field: value})
+
+
+def test_staleness_requires_overlap_engine():
+    with pytest.raises(ValueError, match="overlap"):
+        FederatedConfig(staleness=1)                   # default: vectorized
+    with pytest.raises(ValueError, match="overlap"):
+        FederatedConfig(engine="loop", staleness=2)
+    with pytest.raises(ValueError):
+        FederatedConfig(engine="overlap", staleness=-1)
+    assert FederatedConfig(engine="overlap", staleness=2).staleness == 2
+    with pytest.raises(ValueError, match="overlap"):
+        _spec(staleness=1)
+    assert _spec(engine="overlap", staleness=3).staleness == 3
+
+
+def test_valid_modes_engines_scores_accepted():
+    for mode in ("mlecs", "standalone", "fedavg"):
+        assert FederatedConfig(mode=mode).mode == mode
+    for engine in ("loop", "vectorized", "overlap"):
+        assert FederatedConfig(engine=engine).engine == engine
+    for score in ("volume", "cosine"):
+        assert FederatedConfig(ccl_score=score).ccl_score == score
+
+
+# ---------------------------------------------------------------------------
+# ClientCohort / FederationSpec structural validation
+
+def test_cohort_validation():
+    with pytest.raises(ValueError):
+        ClientCohort(model=_slm(), n_clients=0)
+    with pytest.raises(ValueError):
+        ClientCohort(model=_slm(), data_fraction=0.0)
+    with pytest.raises(ValueError):
+        ClientCohort(model=_slm(), rho=1.5)
+    with pytest.raises(ValueError):
+        ClientCohort(model=_slm(), modalities=())
+    with pytest.raises(ValueError):
+        ClientCohort(model=_slm(), modalities=(0, 0))
+    with pytest.raises(ValueError):
+        ClientCohort(model=_slm(), modalities=(3,))    # out of range for M=3
+    c = ClientCohort(model=_slm(), modalities=[1, 2], rho=0.4,
+                     data_fraction=0.5)
+    assert c.modalities == (1, 2)
+
+
+def test_spec_requires_cohorts_and_matching_connector_interface():
+    with pytest.raises(ValueError):
+        FederationSpec(cohorts=(), server_llm=_llm())
+    # a cohort whose connector latent disagrees with the server's
+    with pytest.raises(ValueError, match="connector"):
+        _spec(cohorts=(ClientCohort(model=_slm(connector_dim=32)),))
+    # disagreeing modality_dim
+    with pytest.raises(ValueError, match="connector"):
+        _spec(cohorts=(ClientCohort(model=_slm(modality_dim=16)),))
+
+
+def test_spec_derived_properties():
+    spec = _spec(cohorts=(ClientCohort(model=_slm(32), n_clients=2),
+                          ClientCohort(model=_slm(48), n_clients=3)))
+    assert spec.n_cohorts == 2
+    assert spec.n_devices == 5
+    assert spec.offsets == (0, 2)
+    assert [spec.cohort_of(j) for j in range(5)] == [0, 0, 1, 1, 1]
+    assert spec.resolved_server_slm == spec.cohorts[0].model
+    cfg = spec.to_config()
+    assert cfg.n_devices == 5 and cfg.engine == spec.engine
+
+
+def test_from_legacy_roundtrip():
+    cfg = FederatedConfig(n_devices=4, rounds=3, lr=1e-2, rho=0.5, seed=7,
+                          mode="fedavg", use_ccl=False)
+    spec = FederationSpec.from_legacy(cfg, _slm(), _llm())
+    assert spec.n_cohorts == 1 and spec.n_devices == 4
+    assert spec.to_config() == cfg          # exact protocol roundtrip
+
+
+# ---------------------------------------------------------------------------
+# mer_partition property tests (run under real hypothesis or the shim)
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(1, 12),
+       m=st.integers(1, 6))
+def test_mer_rho_zero_keeps_exactly_one_modality(seed, n, m):
+    masks = mer_partition(seed, n, m, 0.0)
+    assert masks.shape == (n, m)
+    np.testing.assert_array_equal(masks.sum(axis=1), np.ones(n))
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(1, 10),
+       m=st.integers(2, 6), rho=st.floats(0.0, 1.0))
+def test_mer_partition_seed_deterministic_and_nonempty(seed, n, m, rho):
+    a = mer_partition(seed, n, m, rho)
+    b = mer_partition(seed, n, m, rho)
+    np.testing.assert_array_equal(a, b)
+    assert a.any(axis=1).all()              # every device keeps >=1 modality
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(1, 10),
+       rho=st.floats(0.0, 1.0))
+def test_mer_partition_respects_allowed_subset(seed, n, rho):
+    allowed = np.array([True, False, True, False])
+    masks = mer_partition(seed, n, 4, rho, allowed=allowed)
+    assert not masks[:, ~allowed].any()     # never draws outside the subset
+    assert masks.any(axis=1).all()          # >=1 modality WITHIN the subset
+
+
+def test_mer_partition_allowed_none_matches_legacy_draw():
+    """The allowed=None path must consume the rng exactly like the
+    historical two-arg form (seed reproducibility across the API change)."""
+    a = mer_partition(3, 7, 4, 0.3)
+    b = mer_partition(3, 7, 4, 0.3, allowed=None)
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# cohort mask composition: per-cohort subsets x the MER draw
+
+@given(seed=st.integers(0, 2 ** 12), rho=st.floats(0.0, 1.0))
+def test_draw_masks_composes_subsets_with_mer(seed, rho):
+    spec = _spec(
+        cohorts=(ClientCohort(model=_slm(32), n_clients=3,
+                              modalities=(0, 1)),
+                 ClientCohort(model=_slm(48), n_clients=2, modalities=(2,),
+                              rho=rho)),
+        seed=seed)
+    masks = spec.draw_masks(3)
+    assert masks.shape == (5, 3)
+    assert masks.any(axis=1).all()
+    assert not masks[:3, 2].any()           # cohort A never sees modality 2
+    assert not masks[3:, :2].any()          # cohort B only sees modality 2
+    np.testing.assert_array_equal(masks, spec.draw_masks(3))   # deterministic
+
+
+def test_single_cohort_draw_matches_legacy_mer_partition():
+    """One unrestricted cohort reproduces mer_partition(seed, N, M, rho)
+    bit-for-bit — the masks half of the from_legacy contract."""
+    spec = _spec(cohorts=(ClientCohort(model=_slm(), n_clients=6),),
+                 rho=0.6, seed=11)
+    np.testing.assert_array_equal(spec.draw_masks(3),
+                                  mer_partition(11, 6, 3, 0.6))
+
+
+def test_draw_masks_rejects_out_of_range_subset():
+    spec = _spec(cohorts=(ClientCohort(model=_slm(), modalities=(2,)),))
+    with pytest.raises(ValueError, match="out of range"):
+        spec.draw_masks(2)                  # corpus only has 2 modalities
+
+
+# ---------------------------------------------------------------------------
+# per-cohort data slices
+
+def test_take_fraction_identity_and_thinning():
+    data = {"tokens": np.arange(40).reshape(20, 2),
+            "label": np.arange(20)}
+    assert take_fraction(data, 1.0, 0) is data          # literal identity
+    half = take_fraction(data, 0.5, 0)
+    assert half["tokens"].shape == (10, 2)
+    assert set(half["label"]) <= set(data["label"])
+    np.testing.assert_array_equal(half["tokens"],
+                                  take_fraction(data, 0.5, 0)["tokens"])
+    tiny = take_fraction(data, 0.01, 3)
+    assert tiny["tokens"].shape[0] == 1                 # >=1 row kept
