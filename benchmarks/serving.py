@@ -1,0 +1,138 @@
+"""Serving benchmark: continuous-batching engine vs the seed ``generate()``
+loop on the same request workload.
+
+Workload: R requests, equal prompt length, budgets drawn from {4..32} —
+the spread is the point: static batching (the seed loop) must run every
+batch to its LONGEST budget and re-prefills per batch, while the engine
+evicts finished sequences mid-flight and back-fills the freed slots from
+the queue.  Aggregate tokens/sec counts USEFUL tokens only (each request's
+own budget) and per-request latency is measured from a common t=0
+submission, so the seed loop's "wait for the whole batch" tail shows up in
+p50/p99.
+
+Both paths are warmed with an identical pass first (compile excluded —
+steady-state numbers; cold start is reported by examples/serve_batch.py).
+
+  PYTHONPATH=src python benchmarks/serving.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, slm_cfg
+from repro.launch.serve import generate
+from repro.launch.serve_engine import EngineConfig, ServingEngine
+from repro.models.model import build_model
+
+PROMPT_LEN = 24
+
+
+def _workload(n_requests: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, 128, (PROMPT_LEN,)).astype(np.int32)
+               for _ in range(n_requests)]
+    budgets = [int(b) for b in rng.choice([4, 8, 12, 16, 24, 32],
+                                          size=n_requests)]
+    return prompts, budgets
+
+
+def _percentiles(lat):
+    return {"p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99))}
+
+
+def bench_seed(bundle, params, prompts, budgets, batch: int) -> dict:
+    """Static batching: consecutive groups of ``batch``, each run to the
+    group's longest budget (the seed loop has no mid-flight eviction)."""
+    def one_pass():
+        t0 = time.perf_counter()
+        lat = []
+        for i in range(0, len(prompts), batch):
+            grp = prompts[i:i + batch]
+            bud = budgets[i:i + batch]
+            toks = jnp.asarray(np.stack(grp))
+            out = generate(bundle, params, toks, max_new=max(bud))
+            jax.block_until_ready(out)
+            t_batch = time.perf_counter() - t0   # all submitted at t=0
+            lat.extend([t_batch] * len(grp))
+        return time.perf_counter() - t0, lat
+
+    one_pass()                                    # warmup (compile)
+    wall, lat = one_pass()
+    useful = sum(budgets)
+    return {"wall_s": wall, "tok_s": useful / wall, "useful_tokens": useful,
+            **_percentiles(lat)}
+
+
+def bench_engine(engine: ServingEngine, prompts, budgets) -> dict:
+    def one_pass():
+        t0 = time.perf_counter()
+        rids = [engine.submit(p, max_new=b)
+                for p, b in zip(prompts, budgets)]
+        done = engine.run()
+        wall = time.perf_counter() - t0
+        lat = [done[r].latency for r in rids]
+        toks = sum(len(done[r].out) for r in rids)
+        return wall, lat, toks, engine.n_steps
+
+    one_pass()                                    # warmup (compile)
+    steps0 = engine.n_steps
+    wall, lat, toks, steps1 = one_pass()
+    return {"wall_s": wall, "tok_s": toks / wall, "useful_tokens": toks,
+            "decode_steps": steps1 - steps0, **_percentiles(lat)}
+
+
+def run(fast: bool = True) -> dict:
+    n_requests = 16 if fast else 32
+    batch = 8
+    prompts, budgets = _workload(n_requests)
+
+    cfgs = {
+        "dense": dataclasses.replace(slm_cfg(), n_modalities=0,
+                                     n_soft_tokens=0, connector_dim=0),
+        "ssm": dataclasses.replace(
+            slm_cfg(), name="bench-ssm", family="ssm", ssm_state=8,
+            ssm_head_dim=16, ssm_chunk=8, lora_targets=("in_proj",),
+            n_modalities=0, n_soft_tokens=0, connector_dim=0),
+    }
+    if fast:
+        cfgs.pop("ssm")
+
+    out = {"workload": {"n_requests": n_requests, "prompt_len": PROMPT_LEN,
+                        "budgets": budgets, "batch": batch, "slots": batch,
+                        "backend": jax.default_backend()}}
+    for name, cfg in cfgs.items():
+        bundle = build_model(cfg)
+        params = bundle.init(jax.random.key(0))
+        econf = EngineConfig(
+            n_slots=batch, page_size=16,
+            n_pages=1 + batch * 4, max_pages_per_seq=4, max_out=32,
+            buckets=(PROMPT_LEN,))
+        engine = ServingEngine(bundle, params, econf)
+        seed_r = bench_seed(bundle, params, prompts, budgets, batch)
+        eng_r = bench_engine(engine, prompts, budgets)
+        speedup = eng_r["tok_s"] / seed_r["tok_s"]
+        out[name] = {"seed_generate": seed_r, "engine": eng_r,
+                     "speedup": speedup}
+        print(f"[{name}] seed {seed_r['tok_s']:.1f} tok/s "
+              f"(p50 {seed_r['p50_s']:.2f}s p99 {seed_r['p99_s']:.2f}s) | "
+              f"engine {eng_r['tok_s']:.1f} tok/s "
+              f"(p50 {eng_r['p50_s']:.2f}s p99 {eng_r['p99_s']:.2f}s) | "
+              f"{speedup:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="dense only, 16 requests")
+    args = ap.parse_args()
+    payload = run(fast=args.fast)
+    path = save_result("serving", payload)
+    print("wrote", path)

@@ -45,7 +45,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
     qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
         + (sk - sq)
     kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
+    # kpos < sk masks the zero-padded K rows appended when Sk is not a
+    # multiple of bk (sq/sk are the LOGICAL lengths, shapes the padded ones)
+    mask = kpos < sk
     if causal:
         mask &= kpos <= qpos
     if window > 0:
@@ -81,23 +83,35 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     Sk = k.shape[2]
     bq = min(bq, Sq)
     bk = min(bk, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
-    qf = q.reshape(B * H, Sq, D)
-    kf = k.reshape(B * H, Sk, D)
-    vf = v.reshape(B * H, Sk, D)
+    # Odd / prime sequence lengths: pad up to the next block multiple with
+    # masked rows (the gram_log_volume recipe) instead of crashing.  The
+    # kernel masks padded K rows via its `kpos < sk` term (sk/sq stay the
+    # LOGICAL lengths); padded Q rows attend real keys, produce finite
+    # garbage, and are sliced off below.
+    pad_q = -Sq % bq
+    pad_k = -Sk % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    qf = q.reshape(B * H, Sq_p, D)
+    kf = k.reshape(B * H, Sk_p, D)
+    vf = v.reshape(B * H, Sk_p, D)
 
     kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
                                window=window, sk=Sk, sq=Sq)
     out = pl.pallas_call(
         kernel,
-        grid=(B * H, Sq // bq, Sk // bk),
+        grid=(B * H, Sq_p // bq, Sk_p // bk),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -105,4 +119,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(B, H, Sq, D)
+    out = out.reshape(B, H, Sq_p, D)
+    return out[:, :, :Sq] if pad_q else out

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gram_volume import gram_log_volume as _gram
 from repro.kernels.lora_matmul import lora_matmul as _lora
+from repro.kernels.paged_attention import paged_flash_attention as _paged
 from repro.kernels.ssd_scan import ssd_chunk as _ssd_chunk
 
 
@@ -35,6 +36,48 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
                  v.transpose(0, 2, 1, 3), causal=causal, window=window,
                  bq=bq, bk=bk, interpret=interpret)
     return out.transpose(0, 2, 1, 3).reshape(B, Sq, H * D)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lens, window, *,
+                    use_kernel=None, interpret=None):
+    """Decode-mode (Sq=1) attention over a paged KV cache, GQA-aware.
+
+    q: (B, 1, H, D) model layout;  k_pages/v_pages: (P, ps, K, D);
+    block_tables: (B, M) int32 page ids per logical block;  lens: (B,) int32
+    valid entries per slot INCLUDING the newest token (0 = idle slot);
+    window: scalar int32 (layers.BIG_WINDOW = none; may be traced — the
+    per-layer window rides through the model's layer scan).
+
+    Returns (B, 1, H * D).  ``use_kernel`` None = kernel on TPU, pure-jnp
+    gather path elsewhere (the Pallas grid walks one page per step, which
+    interpret mode would execute as a Python loop — correct but slow; the
+    jnp path is the serving fast path on CPU and the oracle's twin).
+    """
+    B, _, H, D = q.shape
+    ps, K = k_pages.shape[1], k_pages.shape[2]
+    M = block_tables.shape[1]
+    if use_kernel is None:
+        use_kernel = not default_interpret()
+    if use_kernel:
+        interpret = default_interpret() if interpret is None else interpret
+        out = _paged(q, k_pages, v_pages, block_tables, lens, window,
+                     interpret=interpret)
+        return out.reshape(B, 1, H * D)
+    # jnp fast path — mha math inlined (models.layers imports would cycle)
+    G = H // K
+    import math as _math
+    k = k_pages[block_tables].reshape(B, M * ps, K, D).astype(jnp.float32)
+    v = v_pages[block_tables].reshape(B, M * ps, K, D).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, K, G, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k) / _math.sqrt(D)
+    qpos = lens[:, None] - 1
+    kpos = jnp.arange(M * ps, dtype=jnp.int32)[None, :]
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(lens[:, None, None, None] > 0, w, 0.0)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(B, 1, H * D).astype(q.dtype)
 
 
 def gram_log_volume(vs, mask=None, eps: float = 1e-5, interpret=None):

@@ -1,0 +1,120 @@
+"""Decode-mode (Sq=1) flash attention over a paged KV cache — the serving
+engine's hot kernel.
+
+The KV cache lives in fixed-size pages ``(n_pages, page_size, K, D)`` shared
+by all requests; each request owns an ordered list of page ids (its *block
+table*).  The kernel never materializes a request's contiguous KV: the grid's
+innermost axis walks the block table and the BlockSpec index_map — fed by
+scalar-prefetched block tables (``pltpu.PrefetchScalarGridSpec``) — DMAs the
+right physical page for each logical block.  Online softmax accumulates in
+VMEM scratch exactly like the prefill kernel in ``flash_attention.py``.
+
+Grid: ``(batch_slots, q_heads, max_pages_per_seq)``.  GQA needs no host-side
+KV repeat: the K/V index_map divides the query-head grid index by the group
+size.  Pages entirely past a request's length are skipped with ``pl.when``
+(an idle slot with ``len == 0`` skips every page and returns zeros).
+
+The sliding window arrives as a scalar-prefetch operand rather than a static
+kernel parameter because the per-layer window is a traced value inside the
+model's layer scan (gemma3's 5-local:1-global pattern).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, ps: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = len_ref[b] - 1                       # position of the new token
+
+    # skip pages entirely past the sequence (and everything for idle slots)
+    @pl.when(j * ps <= qpos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)     # (1, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (ps, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (ps, D)
+        d = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
+            / math.sqrt(d)                      # (1, ps)
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        mask = (kpos <= qpos) & (qpos - kpos < win_ref[0])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[0, 0, ...] = (acc_scr[...]
+                            / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                            ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_attention(q, k_pages, v_pages, block_tables, lens, window, *,
+                          interpret: bool = True):
+    """q: (B, 1, H, D);  k_pages/v_pages: (P, ps, K, D);
+    block_tables: (B, M) int32 page ids;  lens: (B,) int32 — valid cache
+    entries per slot INCLUDING the just-written token (0 = idle slot);
+    window: scalar int32 sliding window (use layers.BIG_WINDOW for none).
+
+    Returns (B, 1, H, D).  Positions are implicit: entry ``o`` of logical
+    block ``j`` holds absolute position ``j * ps + o``.
+    """
+    B, _, H, D = q.shape
+    _, ps, K, _ = k_pages.shape
+    M = block_tables.shape[1]
+    grp = H // K
+
+    kernel = functools.partial(_paged_kernel, ps=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, H, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, bt, ln, w: (b, 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, bt, ln, w: (bt[b, j], 0, h // grp, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, bt, ln, w: (bt[b, j], 0, h // grp, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D),
+                               lambda b, h, j, bt, ln, w: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens.astype(jnp.int32),
+      jnp.asarray(window, jnp.int32).reshape(1),
+      q, k_pages, v_pages)

@@ -59,6 +59,36 @@ def attention_ref(q, k, v, causal: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lens,
+                        window: Optional[int] = None):
+    """Decode-mode oracle.  q: (B,1,H,D);  k_pages/v_pages: (P,ps,K,D);
+    block_tables: (B,M) page ids;  lens: (B,) valid entries incl. the newest
+    token.  KV heads are grouped (GQA); idle slots (len 0) return zeros.
+    Returns (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    ps, K = k_pages.shape[1], k_pages.shape[2]
+    M = block_tables.shape[1]
+    G = H // K
+    # gather each request's logical KV sequence: (B, M*ps, K, D)
+    k = k_pages[block_tables].reshape(B, M * ps, K, D).astype(jnp.float32)
+    v = v_pages[block_tables].reshape(B, M * ps, K, D).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, K, G, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k) / math.sqrt(D)
+    qpos = lens[:, None] - 1                               # (B,1)
+    kpos = jnp.arange(M * ps)[None, :]                     # (1,S)
+    mask = kpos <= qpos
+    if window is not None and window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(lens[:, None, None, None] > 0, w, 0.0)   # idle slots
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # ssd intra-chunk
 
 def ssd_chunk_ref(x, dt, cum, B_, C_):

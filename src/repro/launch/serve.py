@@ -61,21 +61,40 @@ def generate(bundle: ModelBundle, params, prompt_tokens, max_new: int = 32,
     return jnp.concatenate(out, axis=1)
 
 
+# per-sequence state leaves whose shape never depends on cache capacity:
+# recurrent SSM state (hybrid/ssm) and encoder cross-KV (encdec)
+_STATE_KEYS = ("ssm_h", "ssm_conv", "cross_k", "cross_v")
+
+
 def _reseat_cache(big: Dict, small: Dict) -> Dict:
     """Copy a prefill cache (capacity S) into the serving cache (capacity
-    S+max_new) slot-aligned at the front."""
+    S+max_new) slot-aligned at the front.
+
+    Every leaf is routed explicitly by name; an unknown leaf raises instead
+    of passing through silently — a shape-mismatched pass-through (the old
+    ``out[name] = s`` fallback) corrupts the decode cache far from here.
+    """
     out = dict(big)
-    for name in small:
+    for name, s in small.items():
         if name not in big:
-            out[name] = small[name]
-            continue
-        b, s = big[name], small[name]
-        if b.shape == s.shape:
-            out[name] = s
-        elif name in ("k", "v"):
-            out[name] = jax.lax.dynamic_update_slice_in_dim(b, s, 0, axis=2)
+            raise KeyError(
+                f"prefill cache leaf {name!r} is absent from the serving "
+                f"cache (serving has {sorted(big)})")
+        b = big[name]
+        if name in ("k", "v"):
+            out[name] = s if b.shape == s.shape else \
+                jax.lax.dynamic_update_slice_in_dim(b, s, 0, axis=2)
         elif name == "pos":
-            out[name] = jax.lax.dynamic_update_slice_in_dim(b, s, 0, axis=1)
-        else:
+            out[name] = s if b.shape == s.shape else \
+                jax.lax.dynamic_update_slice_in_dim(b, s, 0, axis=1)
+        elif name in _STATE_KEYS:
+            if b.shape != s.shape:
+                raise ValueError(
+                    f"cache leaf {name!r} is per-sequence state and must "
+                    f"match exactly: serving {b.shape} vs prefill {s.shape}")
             out[name] = s
+        else:
+            raise KeyError(
+                f"unknown cache leaf {name!r}: route it explicitly in "
+                "_reseat_cache (silent pass-through corrupts serving caches)")
     return out

@@ -36,6 +36,12 @@ class ModelBundle(NamedTuple):
     init_cache: Callable
     hidden: Optional[Callable] = None   # (params, batch) -> (B, P+S, d)
                                         # final-norm states (chunked loss)
+    # paged serving contract (repro.models.paged; all families implement it)
+    init_paged: Optional[Callable] = None     # (n_slots, n_pages, page_size)
+    prefill_paged: Optional[Callable] = None  # (params, batch, true_len)
+    insert_paged: Optional[Callable] = None   # (pstate, pack, slot, page_ids)
+    decode_paged: Optional[Callable] = None   # (params, pstate, block_tables,
+                                              #  seq_lens, tokens, active)
 
 
 def _prefix(params, cfg: ModelConfig, batch: Dict[str, Any]):
@@ -133,8 +139,26 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
                     return_hidden=True)
             return h, aux
 
+    from repro.models import paged
+
+    def init_paged_fn(n_slots: int, n_pages: int, page_size: int):
+        return paged.init_paged(cfg, n_slots, n_pages, page_size)
+
+    def prefill_paged_fn(params, batch, true_len):
+        return paged.prefill_paged(params, cfg, batch, true_len)
+
+    def insert_paged_fn(pstate, pack, slot, page_ids):
+        return paged.insert_paged(cfg, pstate, pack, slot, page_ids)
+
+    def decode_paged_fn(params, pstate, block_tables, seq_lens, tokens,
+                        active, use_kernel=None):
+        return paged.decode_paged(params, cfg, pstate, block_tables,
+                                  seq_lens, tokens, active, use_kernel)
+
     return ModelBundle(cfg, init, logits_fn, lm_loss, prefill_fn,
-                       decode_fn, cache_fn, hidden_fn)
+                       decode_fn, cache_fn, hidden_fn,
+                       init_paged_fn, prefill_paged_fn, insert_paged_fn,
+                       decode_paged_fn)
 
 
 def with_overrides(cfg: ModelConfig, **kw) -> ModelConfig:

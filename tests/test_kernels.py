@@ -37,6 +37,29 @@ def test_flash_attention(B, H, K, Sq, Sk, D, window, dtype):
                                np.asarray(expect, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("Sq,Sk", [(129, 129), (131, 131), (129, 131),
+                                   (64, 131)])
+def test_flash_attention_odd_lengths_padded(Sq, Sk):
+    """Prime / 128-indivisible sequence lengths must pad to the next block
+    multiple with masked rows (the gram_log_volume recipe) instead of
+    tripping the old hard ``Sq % bq == 0`` assert."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (1, Sq, 4, 16))
+    k = jax.random.normal(ks[1], (1, Sk, 2, 16))
+    v = jax.random.normal(ks[2], (1, Sk, 2, 16))
+    for window in (0, 16):
+        out = ops.attention(q, k, v, causal=True, window=window,
+                            bq=32, bk=32)
+        assert out.shape == (1, Sq, 4 * 16)
+        kr = jnp.repeat(k, 2, 2).transpose(0, 2, 1, 3)
+        vr = jnp.repeat(v, 2, 2).transpose(0, 2, 1, 3)
+        expect = ref.attention_ref(q.transpose(0, 2, 1, 3), kr, vr,
+                                   causal=True, window=window or None)
+        expect = expect.transpose(0, 2, 1, 3).reshape(1, Sq, 4 * 16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-4, rtol=2e-4)
+
+
 def test_flash_attention_block_shape_independence():
     ks = jax.random.split(jax.random.key(1), 3)
     q = jax.random.normal(ks[0], (1, 128, 2, 32))
@@ -45,6 +68,64 @@ def test_flash_attention_block_shape_independence():
     a = ops.attention(q, k, v, bq=32, bk=32)
     b = ops.attention(q, k, v, bq=128, bk=64)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (the serving engine's Sq=1 hot path)
+
+@pytest.mark.parametrize("H,K,D,ps,M", [(4, 2, 16, 8, 6),   # GQA
+                                        (4, 4, 32, 4, 8),   # MHA
+                                        (4, 1, 16, 16, 3)]) # MQA
+@pytest.mark.parametrize("window", [0, 16])
+def test_paged_attention_kernel(H, K, D, ps, M, window):
+    """Pallas paged kernel (interpret) and the jnp gather path must both
+    match the oracle — mixed fill levels incl. an idle (len 0) slot."""
+    B, P = 4, 24
+    ks = jax.random.split(jax.random.key(11), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kp = jax.random.normal(ks[1], (P, ps, K, D))
+    vp = jax.random.normal(ks[2], (P, ps, K, D))
+    bt = jax.random.randint(ks[3], (B, M), 1, P)
+    lens = jnp.array([1, ps + 1, M * ps, 0], jnp.int32)
+    w = jnp.int32(window if window else 1 << 30)
+    want = np.asarray(ref.paged_attention_ref(
+        q, kp, vp, bt, lens, window=window or None)).reshape(B, 1, H * D)
+    got_kernel = ops.paged_attention(q, kp, vp, bt, lens, w,
+                                     use_kernel=True, interpret=True)
+    got_jnp = ops.paged_attention(q, kp, vp, bt, lens, w, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got_kernel), want,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_jnp), want,
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_paged_attention_matches_contiguous():
+    """A paged cache whose block table is a permutation must reproduce
+    plain end-aligned causal attention over the logically contiguous KV."""
+    B, H, K, D, ps, M = 2, 4, 2, 16, 8, 4
+    S = M * ps
+    ks = jax.random.split(jax.random.key(12), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    # scatter the contiguous KV into a shuffled physical pool
+    perm = np.array([[3, 6, 1, 5], [2, 7, 4, 8]], np.int32)
+    kp = jnp.zeros((9, ps, K, D))
+    vp = jnp.zeros((9, ps, K, D))
+    for b in range(B):
+        for j in range(M):
+            kp = kp.at[perm[b, j]].set(k[b, j * ps:(j + 1) * ps])
+            vp = vp.at[perm[b, j]].set(v[b, j * ps:(j + 1) * ps])
+    lens = jnp.array([S, S], jnp.int32)
+    got = ops.paged_attention(q, kp, vp, jnp.asarray(perm), lens,
+                              jnp.int32(1 << 30), use_kernel=True,
+                              interpret=True)
+    kr = jnp.repeat(k, H // K, 2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, H // K, 2).transpose(0, 2, 1, 3)
+    expect = ref.attention_ref(q.transpose(0, 2, 1, 3), kr, vr, causal=True)
+    expect = expect.transpose(0, 2, 1, 3).reshape(B, 1, H * D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-4, rtol=2e-4)
 
 
 # ---------------------------------------------------------------------------

@@ -74,7 +74,7 @@ def test_decode_matches_forward(fam):
         atol=2e-3, rtol=2e-3)
 
 
-@pytest.mark.parametrize("fam", ["dense", "moe", "ssm", "hybrid"])
+@pytest.mark.parametrize("fam", ["dense", "moe", "ssm", "hybrid", "encdec"])
 def test_multi_step_decode_consistency(fam):
     """K decode steps == teacher-forced forward at each position."""
     cfg = _cfg(**FAMS[fam])
@@ -83,16 +83,22 @@ def test_multi_step_decode_consistency(fam):
     B, S, K = 1, 8, 4
     toks = jax.random.randint(jax.random.key(1), (B, S + K), 0,
                               cfg.vocab_size)
-    full_logits, _ = b.logits(params, {"tokens": toks})
+    batch = {"tokens": toks}
+    if cfg.frontend:
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.frontend_tokens, cfg.frontend_dim),
+            jnp.float32) * 0.5
+    full_logits, _ = b.logits(params, batch)
+    P = full_logits.shape[1] - (S + K)
     from repro.launch.serve import _reseat_cache
-    _, pcache = b.prefill(params, {"tokens": toks[:, :S]})
-    cache = _reseat_cache(b.init_cache(B, S + K), pcache)
+    _, pcache = b.prefill(params, dict(batch, tokens=toks[:, :S]))
+    cache = _reseat_cache(b.init_cache(B, P + S + K), pcache)
     for i in range(K):
         logits, cache = b.decode_step(params, cache, toks[:, S + i:S + i + 1],
-                                      jnp.int32(S + i))
+                                      jnp.int32(P + S + i))
         np.testing.assert_allclose(
             np.asarray(logits, np.float32),
-            np.asarray(full_logits[:, S + i], np.float32),
+            np.asarray(full_logits[:, P + S + i], np.float32),
             atol=6e-2, rtol=5e-2, err_msg=f"step {i}")  # bf16 state-handoff noise
 
 
