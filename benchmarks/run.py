@@ -18,13 +18,14 @@ import sys
 import time
 
 BENCHES = ["table1", "table2", "fig3", "fig4", "gram_ablation",
-           "roofline", "microbench"]
+           "robustness", "roofline", "microbench"]
 _MODULES = {
     "table1": "table1_performance",
     "table2": "table2_scalability",
     "fig3": "fig3_communication",
     "fig4": "fig4_ablation",
     "gram_ablation": "gram_ablation",
+    "robustness": "robustness",
     "roofline": "roofline",
     "microbench": "microbench",
 }

@@ -1,0 +1,74 @@
+"""FaultSchedule — deterministic per-round realization of a FaultSpec.
+
+All randomness is host-side numpy, seeded from ``(spec.seed, round)`` only:
+the schedule is a pure function of the round index, so every engine (and a
+re-run of the same scenario) draws the identical fault trace, and none of
+it touches the jax PRNG streams that drive init/shuffling — a fault
+scenario replays the exact clean run plus the faults.
+
+The Byzantine set is drawn ONCE (a compromised device stays compromised).
+Straggle events persist across rounds: an event starting at round ``r0``
+with delay ``d`` keeps the client's uploads out of the aggregation for
+rounds ``r0 .. r0+d-1``; :meth:`FaultSchedule.round_masks` reconstructs
+the in-flight events by replaying the last ``max_delay`` rounds' draws, so
+no mutable state is carried (rounds can be queried out of order, which the
+engine-parity tests rely on).
+
+Every round is guaranteed at least one present, on-time client — the MER
+"≥1 modality" analogue: the mass MMA renormalizes over must never be
+empty (Eq. 13's denominator).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.spec import FaultSpec
+
+
+class FaultSchedule:
+    """Per-round (present, ontime) masks + the fixed Byzantine set for a
+    federation of ``n`` clients (global client order)."""
+
+    def __init__(self, spec: FaultSpec, n: int):
+        self.spec = spec
+        self.n = int(n)
+        rng = np.random.default_rng([spec.seed, 0xB12A17])
+        n_byz = int(round(spec.byzantine * self.n))
+        byz = np.zeros(self.n, bool)
+        byz[rng.permutation(self.n)[:n_byz]] = True
+        self.byzantine = byz
+
+    # ------------------------------------------------------------------
+    def _draws(self, rnd: int):
+        """Round ``rnd``'s raw uniforms/delays (stateless, replayable)."""
+        rng = np.random.default_rng([self.spec.seed, 0xF0A17, int(rnd)])
+        u_drop = rng.random(self.n)
+        u_strag = rng.random(self.n)
+        delays = rng.integers(1, self.spec.max_delay + 1, size=self.n)
+        pick = int(rng.integers(self.n))
+        return u_drop, u_strag, delays, pick
+
+    def round_masks(self, rnd: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``(present, ontime)`` bool masks for round ``rnd``.
+
+        ``present`` gates training and redistribution (an offline client's
+        round does not happen); ``ontime`` gates only the upload (a
+        straggler trains and receives, but misses the aggregation
+        deadline).  The aggregation mass is ``present & ontime``, with at
+        least one such client forced per round.
+        """
+        spec = self.spec
+        u_drop, _, _, pick = self._draws(rnd)
+        present = u_drop >= spec.dropout
+        late = np.zeros(self.n, bool)
+        if spec.straggler > 0.0:
+            for r0 in range(max(0, rnd - spec.max_delay + 1), rnd + 1):
+                _, u_strag, delays, _ = self._draws(r0)
+                late |= (u_strag < spec.straggler) & (r0 + delays > rnd)
+        ontime = ~late
+        if not (present & ontime).any():
+            present[pick] = True
+            ontime[pick] = True
+        return present, ontime

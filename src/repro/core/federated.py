@@ -96,6 +96,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import weakref
 from typing import Dict, List, Optional, Tuple
 
@@ -105,8 +106,10 @@ import numpy as np
 
 from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
+from repro.core.faults import FaultSchedule
 from repro.core.spec import (CCL_SCORES, ENGINES, MODES, ClientCohort,
-                             FederationSpec, validate_protocol)
+                             FaultSpec, FederationSpec, validate_protocol)
+from repro.data import attacks
 from repro.data.multimodal import paper_split, take_fraction, train_test_split
 from repro.data.pipeline import (RoundPrefetcher, batches, eval_batches,
                                  np_batches, np_eval_batches,
@@ -138,6 +141,30 @@ def _do_seccl(cfg: "FederatedConfig") -> bool:
 def _ccl_weight(cfg: "FederatedConfig") -> float:
     """CCL loss weight of the device public-data steps (0 outside mlecs)."""
     return 0.5 if (cfg.use_ccl and cfg.mode == "mlecs") else 0.0
+
+
+def _where_clients(mask, new, old):
+    """Per-client select over the stacked leading axis: ``new`` where the
+    client participated this round, ``old`` (its pre-round value) where it
+    was offline.  The dropout "freeze" as pure data flow — the mask is a
+    traced (n,) vector, so fault rounds share the clean round's compiled
+    trace instead of changing any shape."""
+    def sel(a, b):
+        m = mask.reshape(mask.shape[:1] + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, new, old)
+
+
+def _scale_uploads(uploads: "lora.StackedClients", scale):
+    """Byzantine scaled-update inside the compiled round: each client
+    REPORTS ``scale_j × u_j`` (1.0 for honest clients) while its local
+    params stay honest — the in-jit vector form of
+    :func:`repro.data.attacks.scaled_update`."""
+    return lora.StackedClients(
+        {k: (v.astype(jnp.float32)
+             * scale.reshape(scale.shape[:1] + (1,) * (v.ndim - 1))
+             ).astype(v.dtype)
+         for k, v in uploads.trainable.items()})
 
 
 @dataclasses.dataclass
@@ -182,12 +209,17 @@ class FederatedConfig:
                                      # params (FedMLLM-baseline proxy)
     ccl_score: str = "volume"        # volume (paper Eq. 5-8) | cosine
                                      # (pairwise prior-work ablation)
+    robust: str = "mean"             # MMA reduction: mean (Eq. 13) |
+                                     # trimmed_mean | norm_clip
+    trim_frac: float = 0.2           # trimmed_mean: fraction cut per end
+    faults: Optional[FaultSpec] = None   # unreliable-client model (None =
+                                     # every client honest and always on)
 
     def __post_init__(self):
         if self.n_devices < 1:
             raise ValueError("n_devices must be >= 1")
         validate_protocol(self.mode, self.engine, self.ccl_score,
-                          self.staleness)
+                          self.staleness, self.robust, self.trim_frac)
 
 
 class _Cohort:
@@ -310,6 +342,31 @@ class FederatedRunner:
         M = corpus["modality_feats"].shape[1]
         self.masks = spec.draw_masks(M)
 
+        # client-fault model: the schedule's per-round draws are host data
+        # consumed by the compiled rounds as zero-weight masks (never
+        # shapes).  Label-flip poisoning rewrites the Byzantine clients'
+        # private TRAIN shards here — before any iterator snapshots them —
+        # so every engine reads identical (poisoned) shuffle streams; test
+        # shards stay clean (degradation is measured on honest data).
+        self._faults = (FaultSchedule(spec.faults, N)
+                        if spec.faults is not None else None)
+        self._round_idx = 0
+        self._rnd_present = None     # (N,) bool — training + delivery mask
+        self._rnd_contrib = None     # (N,) bool — aggregation mask
+        self._rnd_weights = None     # (N,) f32 — survivor-renormalized
+        self._attack_scale = None    # (N,) f32 — scaled-update vector
+        if self._faults is not None:
+            fl = spec.faults
+            if fl.attack == "label_flip":
+                for j in np.flatnonzero(self._faults.byzantine):
+                    self.priv_train[j] = attacks.label_flip(
+                        self.priv_train[j], seed=fl.seed + 31_000 + j)
+            elif fl.attack == "scaled_update" and \
+                    bool(self._faults.byzantine.any()):
+                self._attack_scale = np.where(
+                    self._faults.byzantine, fl.attack_scale,
+                    1.0).astype(np.float32)
+
         # models (per-cohort architectures; global key schedule)
         device_params = [
             ccl_lib.init_unified(keys[j], bundles[spec.cohort_of(j)])
@@ -331,6 +388,7 @@ class FederatedRunner:
         # normalized GLOBALLY, so per-cohort partial sums recompose into
         # the flat Eq. 13 aggregate on fully-shared keys
         counts = [int(self.masks[j].sum()) for j in range(N)]
+        self._mod_counts = counts
         if cfg.use_mma and cfg.mode == "mlecs":
             self._agg_weights = mma.aggregation_weights(counts)
         else:
@@ -361,6 +419,11 @@ class FederatedRunner:
                              and not self._cohorts[0].own
                              and len(self._cohorts[0].shared)
                              == len(server_lora))
+        # the fused single-jit round additionally needs the MEAN reduction:
+        # trimmed/clipped aggregation is an order statistic over raw
+        # per-client uploads and runs EAGERLY (one shared op sequence
+        # across engines), so robust != "mean" takes the split schedule
+        self._fused = self._homogeneous and cfg.robust == "mean"
 
         bs = cfg.batch_size
         if self.engine in ("vectorized", "overlap"):
@@ -391,14 +454,15 @@ class FederatedRunner:
             # public_test
             self._server_eval_fn = seccl.make_eval_fn(self.llm)
             if self.engine == "vectorized":
-                if self._homogeneous:
+                if self._fused:
                     # the legacy fused single-jit round (bit-for-bit the
                     # pre-cohort engine)
                     self._round_fn = self._make_vectorized_round()
                 else:
-                    # multi-cohort: the split schedule — per-cohort device
-                    # phases + an EAGER cross-cohort combine + the server
-                    # phase.  The combine must run eagerly in every engine:
+                    # multi-cohort or robust reduction: the split schedule
+                    # — per-cohort device phases + an EAGER combine + the
+                    # server phase.  The combine must run eagerly in every
+                    # engine:
                     # inside one fused jit XLA fuses it into its consumers
                     # (server landing AND client broadcast) and the
                     # duplicated fusions round differently at bf16 ULP,
@@ -530,6 +594,57 @@ class FederatedRunner:
         # the (T, N, B, ...) client stacks, server stack replicated)
 
     # ------------------------------------------------------------------
+    # per-round fault state (no-ops without a FaultSpec)
+
+    def _begin_round(self) -> None:
+        """Advance the fault schedule: draw this round's presence/straggle
+        masks and mass-renormalize the Eq. 13 weights over the surviving
+        (present AND on-time) set.  Called exactly once at the top of every
+        engine's round; fault-free runs keep the static init-time weights
+        and pay nothing."""
+        if self._faults is None:
+            return
+        cfg = self.cfg
+        present, ontime = self._faults.round_masks(self._round_idx)
+        self._round_idx += 1
+        contrib = present & ontime
+        if cfg.use_mma and cfg.mode == "mlecs":
+            w = mma.aggregation_weights(self._mod_counts, present=contrib)
+        else:
+            w = contrib.astype(np.float32) / max(int(contrib.sum()), 1)
+        self._rnd_present = present
+        self._rnd_contrib = contrib
+        self._rnd_weights = np.asarray(w, np.float32)
+
+    def _active_weights(self) -> np.ndarray:
+        """This round's globally-normalized weights as host numpy (the
+        fault-masked draw when a schedule is active; static Eq. 13 else)."""
+        if self._rnd_weights is not None:
+            return self._rnd_weights
+        return np.asarray(self._agg_weights, np.float32)
+
+    def _weights_for(self, rt: _Cohort):
+        """The weight slice a device phase consumes this round — traced
+        DATA, so fault rounds reuse the phase's one compiled trace."""
+        if self._rnd_weights is None:
+            return rt.weights
+        return jnp.asarray(self._rnd_weights[rt.slice])
+
+    def _w_total_for(self, rt: _Cohort) -> float:
+        """Cohort ``rt``'s weight mass this round (surviving mass under
+        faults — the combine's renormalization denominator)."""
+        if self._rnd_weights is None:
+            return rt.w_total
+        return float(self._rnd_weights[rt.slice].sum(dtype=np.float32))
+
+    def _present_for(self, rt: _Cohort):
+        """Cohort slice of the round's presence mask (None ⇒ no faults —
+        the phase functions then take the mask-free trace)."""
+        if self._rnd_present is None:
+            return None
+        return jnp.asarray(self._rnd_present[rt.slice])
+
+    # ------------------------------------------------------------------
     def _make_seccl_step(self):
         """Joint SE-CCL update: LLM minimizes Eq. 15, SLM minimizes Eq. 16.
         Returned unjitted — the loop engine jits it per call, the stacked
@@ -620,11 +735,25 @@ class FederatedRunner:
         """What cohort ``rt`` receives in Alg. 1 step 5: the server's
         values on the shared-shape subset plus the intra-cohort MMA average
         of its architecture-specific keys.  Fully-shared single cohort ⇒
-        ``down`` itself — the legacy broadcast, bit-for-bit."""
+        ``down`` itself — the legacy broadcast, bit-for-bit.
+
+        Under faults a key can have aggregated nothing this round (every
+        participant absent) — the combine omits it; the delivery then
+        re-sends the previous global value so its tree structure (and the
+        prox reference's) never changes with the fault draw."""
         if self._homogeneous:
             return down
-        delivery = {k: down[k] for k in rt.shared}
-        delivery.update(own_avg)
+        delivery = {}
+        for k in rt.shared:
+            if k in down:
+                delivery[k] = down[k]
+            elif k in rt.last_global:
+                delivery[k] = rt.last_global[k]
+        for k in rt.own:
+            if k in own_avg:
+                delivery[k] = own_avg[k]
+            elif k in rt.last_global:
+                delivery[k] = rt.last_global[k]
         return delivery
 
     # ------------------------------------------------------------------
@@ -641,14 +770,33 @@ class FederatedRunner:
         ccl_step, amt_step = self._make_device_steps(rt)
         se_step = self._se_step_raw
         do_seccl = _do_seccl(cfg)
+        with_faults = self._faults is not None
+        scale = (jnp.asarray(self._attack_scale)
+                 if self._attack_scale is not None else None)
+
+        def deliver(p, uploads, flat, present):
+            """Splice the broadcast delivery into the stacked params; under
+            faults, offline clients receive nothing (masked select — same
+            trace, the mask is data)."""
+            bcast = uploads.broadcast(flat).trainable
+            if present is not None:
+                cur = lora.partition(p, lora.is_lora_leaf)
+                bcast = _where_clients(present, bcast, cur)
+            return lora.combine(p, bcast)
 
         def round_fn(states, server_llm, server_slm, server_llm_opt,
                      server_slm_opt, last_globals, weights, pubs, privs,
-                     server_steps):
+                     server_steps, present):
             gref = last_globals[0] if cfg.prox_weight > 0 else None
             p, o = self._device_chain(
                 ccl_step, amt_step, states[0][0], states[0][1], server_llm,
                 gref, pubs[0], privs[0])
+            if with_faults:
+                # an offline client's round does not happen: its training
+                # is undone by a per-client select (pure data flow — the
+                # step count and every shape stay those of the clean trace)
+                p = _where_clients(present[0], p, states[0][0])
+                o = _where_clients(present[0], o, states[0][1])
             # the model devices actually serve between rounds (client eval)
             post_amt = (p,)
 
@@ -656,14 +804,19 @@ class FederatedRunner:
                 return (post_amt, ((p, o),), server_llm, server_slm,
                         server_llm_opt, server_slm_opt, last_globals)
 
-            # (3) MMA aggregation (Eq. 13) over the stacked upload axis
+            # (3) MMA aggregation (Eq. 13) over the stacked upload axis;
+            # under faults the weights arrive pre-renormalized over the
+            # present-and-on-time set, so stale uploads get weight exactly 0
             uploads = lora.StackedClients(
                 lora.partition(p, lora.is_lora_leaf))
+            if scale is not None:
+                uploads = _scale_uploads(uploads, scale)
             agg = mma.aggregate_stacked(uploads, weights[0])
 
             if cfg.mode == "fedavg":
                 # Multi-FedAvg: broadcast the average straight back
-                p = lora.combine(p, uploads.broadcast(agg).trainable)
+                p = deliver(p, uploads, agg,
+                            present[0] if with_faults else None)
                 return (post_amt, ((p, o),), server_llm, server_slm,
                         server_llm_opt, server_slm_opt, (agg,))
 
@@ -684,7 +837,8 @@ class FederatedRunner:
 
             # (5) redistribute server-SLM LoRA to every device (broadcast)
             down = lora.partition(server_slm, lora.is_lora_leaf)
-            p = lora.combine(p, uploads.broadcast(down).trainable)
+            p = deliver(p, uploads, down,
+                        present[0] if with_faults else None)
             return (post_amt, ((p, o),), server_llm, server_slm,
                     server_llm_opt, server_slm_opt, (down,))
 
@@ -803,11 +957,19 @@ class FederatedRunner:
         """Each cohort's intra-cohort MMA average of its architecture-
         specific (non-shared) keys, from its f32 partial sums — computed
         EAGERLY with one shared op sequence, so every engine rounds these
-        identically (in-jit variants fuse differently at bf16 ULP)."""
-        return tuple(
-            {k: (p[k] / np.float32(rt.w_total)).astype(rt.own_dtypes[k])
-             for k in rt.own}
-            for rt, p in zip(self._cohorts, partials))
+        identically (in-jit variants fuse differently at bf16 ULP).
+        Under faults the divisor is the cohort's *surviving* mass; a
+        cohort that lost every contributor this round averages nothing
+        (its clients keep last round's own-key values)."""
+        out = []
+        for rt, p in zip(self._cohorts, partials):
+            wt = self._w_total_for(rt)
+            if not rt.own or not wt > 0.0:
+                out.append({})
+                continue
+            out.append({k: (p[k] / np.float32(wt)).astype(rt.own_dtypes[k])
+                        for k in rt.own})
+        return tuple(out)
 
     def _combine_payloads(self, payloads, device=None):
         """Fold the cohorts' device-phase payloads into the server-bound
@@ -817,7 +979,11 @@ class FederatedRunner:
         move the partials to the combine placement, and run the
         shared-subset combine, EAGERLY and in the same op sequence in
         every engine (see the split-schedule note in ``__init__``).
+        Under ``robust != "mean"`` the payloads are instead RAW stacked
+        uploads and the reduction routes to :meth:`_robust_combine`.
         Returns ``(agg, own_avgs)``."""
+        if self.cfg.robust != "mean":
+            return self._robust_combine(payloads, device=device)
         if self._homogeneous:
             return payloads[0], ({},)
         own_avgs = self._own_avgs(payloads)
@@ -825,9 +991,65 @@ class FederatedRunner:
             jax.device_put(p, device) for p in payloads]
         agg = mma.combine_cohort_partials(
             partials, [rt.shared for rt in self._cohorts],
-            [rt.w_total for rt in self._cohorts],
+            [self._w_total_for(rt) for rt in self._cohorts],
             self._server_lora_dtypes)
         return agg, own_avgs
+
+    def _robust_combine(self, payloads, device=None):
+        """The robust counterpart of :meth:`_combine_payloads`:
+        ``payloads[c]`` is cohort ``c``'s RAW stacked upload dict (order
+        statistics cannot be taken over pre-summed partials).  One eager
+        shared op sequence — every engine hands its uploads to this exact
+        reduction, so the robust paths stay structurally parity-safe the
+        same way the mean combine does.  Returns ``(agg, own_avgs)``."""
+        cfg = self.cfg
+        w = self._active_weights()
+        contrib = self._rnd_contrib          # None without a fault model
+        if device is not None:
+            payloads = [jax.device_put(p, device) for p in payloads]
+        if self._homogeneous:
+            agg = mma.aggregate_stacked(
+                payloads[0], w, robust=cfg.robust, present=contrib,
+                trim_frac=cfg.trim_frac)
+            return agg, ({},)
+        own_avgs = []
+        for rt, p in zip(self._cohorts, payloads):
+            wsl = w[rt.slice]
+            csl = None if contrib is None else contrib[rt.slice]
+            mass = float(wsl.sum() if csl is None else (wsl * csl).sum())
+            if not rt.own or not mass > 0.0:
+                own_avgs.append({})
+                continue
+            own = mma.aggregate_stacked(
+                {k: p[k] for k in rt.own}, wsl, robust=cfg.robust,
+                present=csl, trim_frac=cfg.trim_frac)
+            own_avgs.append(own)
+        agg = mma.robust_combine_cohorts(
+            payloads, [w[rt.slice] for rt in self._cohorts],
+            [rt.shared for rt in self._cohorts],
+            self._server_lora_dtypes, cfg.robust,
+            present=(None if contrib is None else
+                     [contrib[rt.slice] for rt in self._cohorts]),
+            trim_frac=cfg.trim_frac)
+        return agg, tuple(own_avgs)
+
+    def _stable_agg(self, agg):
+        """Fill zero-mass shared keys (every participant absent this
+        round) with the server's CURRENT values before the jitted server
+        phase: ``lora.combine`` with the current value is the same no-op
+        as omitting the key, but omitting changes the aggregate's tree
+        structure with the fault draw — and a structure change retraces
+        the server phase, violating the no-retrace invariant."""
+        if self._rnd_present is None or self._homogeneous:
+            return agg
+        missing = [k for rt in self._cohorts for k in rt.shared
+                   if k not in agg]
+        if missing:
+            cur = lora.partition(self.server_slm, lora.is_lora_leaf)
+            agg = dict(agg)
+            for k in missing:
+                agg[k] = cur[k]
+        return agg
 
     def _apply_deliveries(self, down, own_avgs) -> None:
         """Alg. 1 step 5 across cohorts: splice each cohort's delivery
@@ -871,23 +1093,46 @@ class FederatedRunner:
         do_seccl = _do_seccl(cfg)
         standalone = cfg.mode == "standalone"
         multi = not self._homogeneous
+        robust = cfg.robust
+        with_faults = self._faults is not None
         on_cpu = jax.default_backend() == "cpu"
-        donate_dev = () if on_cpu else (1,)          # stacked_opt
+        # under faults the pre-round stacked state feeds the freeze-select,
+        # so the opt buffers cannot be donated to the chain
+        donate_dev = () if (on_cpu or with_faults) else (1,)  # stacked_opt
         donate_srv = () if on_cpu else (2, 3)        # server opt states
 
         def make_device_phase(rt: _Cohort):
             ccl_step, amt_step = self._make_device_steps(rt)
+            scale = (jnp.asarray(self._attack_scale[rt.slice])
+                     if self._attack_scale is not None else None)
 
             def device_phase(stacked_params, stacked_opt, anchor_llm,
-                             last_global, weights, pub_steps, priv_steps):
+                             last_global, weights, pub_steps, priv_steps,
+                             present):
                 gref = last_global if cfg.prox_weight > 0 else None
-                stacked_params, stacked_opt = self._device_chain(
+                new_p, new_o = self._device_chain(
                     ccl_step, amt_step, stacked_params, stacked_opt,
                     anchor_llm, gref, pub_steps, priv_steps)
+                if with_faults:
+                    # offline clients' rounds do not happen (masked select
+                    # — the fault draw is data, the trace stays the clean
+                    # round's)
+                    new_p = _where_clients(present, new_p, stacked_params)
+                    new_o = _where_clients(present, new_o, stacked_opt)
+                stacked_params, stacked_opt = new_p, new_o
                 if standalone:
                     return stacked_params, stacked_opt, ()
                 uploads = lora.StackedClients(
                     lora.partition(stacked_params, lora.is_lora_leaf))
+                if scale is not None:
+                    uploads = _scale_uploads(uploads, scale)
+                if robust != "mean":
+                    # robust reductions are order statistics over the
+                    # client axis — they need the RAW uploads at the
+                    # combine point, not a pre-summed partial; the shared
+                    # eager combine then reduces identically in every
+                    # engine
+                    return stacked_params, stacked_opt, uploads.trainable
                 if not multi:
                     # legacy single-cohort: the payload IS the aggregate
                     agg = mma.aggregate_stacked(uploads, weights)
@@ -929,9 +1174,18 @@ class FederatedRunner:
         client axis and splice it into the stacked tree.  Frozen leaves
         pass through by reference (zero copy); only the (n, ...) LoRA
         broadcasts materialize — the same values the vectorized engine's
-        in-jit broadcast produces, bit for bit."""
+        in-jit broadcast produces, bit for bit.  Under faults, offline
+        clients receive nothing: the broadcast is masked with THIS round's
+        presence draw at apply time (under overlap staleness the delivery
+        may have been produced rounds ago — what matters is who is
+        reachable when it lands)."""
         bcast = {k: jnp.broadcast_to(v, (rt.n,) + v.shape)
                  for k, v in delivery.items()}
+        if self._rnd_present is not None:
+            pres = jnp.asarray(self._rnd_present[rt.slice])
+            cur = lora.partition(stacked_params,
+                                 lambda s, _b=bcast: s in _b)
+            bcast = _where_clients(pres, bcast, cur)
         return lora.combine(stacked_params, bcast)
 
     def _to_client_placement(self, rt: _Cohort, tree):
@@ -963,6 +1217,7 @@ class FederatedRunner:
         its delivery lands one round late.
         """
         cfg = self.cfg
+        self._begin_round()
         pubs, privs, server = next(self._prefetch)
         payloads, post_amts = [], []
         for c, rt in enumerate(self._cohorts):
@@ -970,7 +1225,8 @@ class FederatedRunner:
             anchor_llm = lora.combine(rt.anchor_base, rt.anchor_tr)
             post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
                 rt.stacked_params, rt.stacked_opt, anchor_llm,
-                rt.last_global, rt.weights, pubs[c], privs[c])
+                rt.last_global, self._weights_for(rt), pubs[c], privs[c],
+                self._present_for(rt))
             rt.stacked_params = post_amt
             post_amts.append(post_amt)
             payloads.append(payload)
@@ -991,7 +1247,8 @@ class FederatedRunner:
             # the aggregate itself (anchor model never changes)
             self._srv_q.append((agg, None, own_avgs))
         else:
-            agg_srv = jax.device_put(agg, self._server_device)
+            agg_srv = jax.device_put(self._stable_agg(agg),
+                                     self._server_device)
             (self.server_llm, self.server_slm, self.server_llm_opt,
              self.server_slm_opt, down, anchor_tr) = self._server_phase_fn(
                 self.server_llm, self.server_slm, self.server_llm_opt,
@@ -1045,18 +1302,20 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def _run_round_vectorized(self, evaluate: bool = True) -> Dict:
-        if not self._homogeneous:
+        if not self._fused:
             return self._run_round_split(evaluate)
         cfg = self.cfg
+        self._begin_round()
         pubs, privs, server = self._assemble_round()
         states = tuple((rt.stacked_params, rt.stacked_opt)
                        for rt in self._cohorts)
         lgs = tuple(rt.last_global for rt in self._cohorts)
-        ws = tuple(rt.weights for rt in self._cohorts)
+        ws = tuple(self._weights_for(rt) for rt in self._cohorts)
+        pres = tuple(self._present_for(rt) for rt in self._cohorts)
         (post_amt, states, self.server_llm, self.server_slm,
          self.server_llm_opt, self.server_slm_opt, lgs) = self._round_fn(
             states, self.server_llm, self.server_slm, self.server_llm_opt,
-            self.server_slm_opt, lgs, ws, pubs, privs, server)
+            self.server_slm_opt, lgs, ws, pubs, privs, server, pres)
         for rt, (p, o), lg in zip(self._cohorts, states, lgs):
             rt.stacked_params, rt.stacked_opt, rt.last_global = p, o, lg
 
@@ -1072,12 +1331,14 @@ class FederatedRunner:
         redistribution.  No pipelining, no staleness, no prefetch thread;
         anchors always come from the live server LLM."""
         cfg = self.cfg
+        self._begin_round()
         pubs, privs, server = self._assemble_round()
         payloads, post_amts = [], []
         for c, rt in enumerate(self._cohorts):
             post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
                 rt.stacked_params, rt.stacked_opt, self.server_llm,
-                rt.last_global, rt.weights, pubs[c], privs[c])
+                rt.last_global, self._weights_for(rt), pubs[c], privs[c],
+                self._present_for(rt))
             rt.stacked_params = post_amt
             post_amts.append(post_amt)
             payloads.append(payload)
@@ -1090,7 +1351,7 @@ class FederatedRunner:
                 (self.server_llm, self.server_slm, self.server_llm_opt,
                  self.server_slm_opt, down, _) = self._server_phase_fn(
                     self.server_llm, self.server_slm, self.server_llm_opt,
-                    self.server_slm_opt, agg, server)
+                    self.server_slm_opt, self._stable_agg(agg), server)
                 self._apply_deliveries(down, own_avgs)
 
         if not evaluate:
@@ -1101,11 +1362,28 @@ class FederatedRunner:
     # ------------------------------------------------------------------
     def _run_round_loop(self, evaluate: bool = True) -> Dict:
         cfg = self.cfg
+        self._begin_round()
+        pres = self._rnd_present
+        scale = self._attack_scale
         # (2) device side: CCL then AMT, cohort by cohort
         uploads: List[List[Dict]] = []
         for rt in self._cohorts:
             ups = []
             for i in range(rt.n):
+                j = rt.offset + i
+                if pres is not None and not pres[j]:
+                    # offline: the round does not happen for this device —
+                    # but its shuffle streams must still advance, or the
+                    # stacked engines' replay of the per-GLOBAL-client
+                    # streams would desynchronize from this reference
+                    if _do_ccl(cfg):
+                        for _ in range(cfg.local_steps_ccl):
+                            next(rt.pub_iters[i])
+                    for _ in range(cfg.local_steps_amt):
+                        next(rt.priv_iters[i])
+                    ups.append(lora.partition(rt.device_params[i],
+                                              lora.is_lora_leaf))
+                    continue
                 p, o = rt.device_params[i], rt.device_opt[i]
                 if _do_ccl(cfg):
                     for _ in range(cfg.local_steps_ccl):
@@ -1121,6 +1399,14 @@ class FederatedRunner:
                                               None, gref)
                 rt.device_params[i], rt.device_opt[i] = p, o
                 ups.append(lora.partition(p, lora.is_lora_leaf))
+            if scale is not None:
+                # Byzantine scaled-update: ALL marked clients report
+                # scale×u (presence doesn't matter — a stale upload has
+                # weight 0 anyway, and the stacked engines scale the whole
+                # vector unconditionally)
+                ups = [attacks.scaled_update(u, float(scale[rt.offset + i]))
+                       if scale[rt.offset + i] != 1.0 else u
+                       for i, u in enumerate(ups)]
             uploads.append(ups)
 
         client_eval = self._evaluate_clients() if evaluate else None
@@ -1135,24 +1421,33 @@ class FederatedRunner:
         # at bf16 ULP scale, which training then amplifies past the
         # engines' 1e-5 agreement.  Cross-cohort, the same
         # partials-then-combine sequence as the fused round runs eagerly.
-        if self._homogeneous:
+        # Robust reductions hand the RAW stacked uploads to the shared
+        # eager combine — identical op sequence to the stacked engines.
+        if cfg.robust != "mean":
+            agg, own_avgs = self._combine_payloads(
+                [lora.StackedClients.stack(ups).trainable
+                 for ups in uploads])
+        elif self._homogeneous:
             agg = mma.aggregate_stacked(
-                lora.StackedClients.stack(uploads[0]), self._agg_weights)
+                lora.StackedClients.stack(uploads[0]),
+                self._weights_for(self._cohorts[0]))
             own_avgs: Tuple[Dict, ...] = ({},)
         else:
             agg, own_avgs = self._combine_payloads([
                 mma.partial_aggregate_stacked(
-                    lora.StackedClients.stack(ups), rt.weights)
+                    lora.StackedClients.stack(ups), self._weights_for(rt))
                 for rt, ups in zip(self._cohorts, uploads)])
 
         if cfg.mode == "fedavg":
-            # Multi-FedAvg: broadcast the average straight back
+            # Multi-FedAvg: broadcast the average straight back (offline
+            # clients receive nothing)
             for c, rt in enumerate(self._cohorts):
                 delivery = self._cohort_delivery(rt, agg, own_avgs[c])
                 rt.last_global = delivery
                 for i in range(rt.n):
-                    rt.device_params[i] = lora.combine(rt.device_params[i],
-                                                       delivery)
+                    if pres is None or pres[rt.offset + i]:
+                        rt.device_params[i] = lora.combine(
+                            rt.device_params[i], delivery)
             return self._finalize_eval(client_eval) if evaluate else {}
 
         self.server_slm = lora.combine(self.server_slm, agg)
@@ -1170,15 +1465,40 @@ class FederatedRunner:
                     self.server_llm_opt, self.server_slm_opt, batch)
 
         # (5) redistribute the server-SLM LoRA: shared subset from the
-        # server, cohort-local keys from the intra-cohort average
+        # server, cohort-local keys from the intra-cohort average (offline
+        # clients receive nothing)
         down = lora.partition(self.server_slm, lora.is_lora_leaf)
         for c, rt in enumerate(self._cohorts):
             delivery = self._cohort_delivery(rt, down, own_avgs[c])
             rt.last_global = delivery
             for i in range(rt.n):
-                rt.device_params[i] = lora.combine(rt.device_params[i],
-                                                   delivery)
+                if pres is None or pres[rt.offset + i]:
+                    rt.device_params[i] = lora.combine(rt.device_params[i],
+                                                       delivery)
         return self._finalize_eval(client_eval) if evaluate else {}
+
+    # ------------------------------------------------------------------
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-trace counts of the engine's round functions — the
+        no-retrace invariant's measurement hook.  Fault draws are DATA
+        (zero-weight masks), never shapes: after the warm-up round every
+        subsequent round (dropout, stragglers, Byzantine scaling included)
+        must leave these counts unchanged."""
+        out: Dict[str, int] = {}
+        if self.engine == "loop":
+            for rt in self._cohorts:
+                out[f"ccl_step/{rt.idx}"] = rt.dev_ccl_step._cache_size()
+                out[f"amt_step/{rt.idx}"] = rt.dev_amt_step._cache_size()
+            out["se_step"] = self._se_step._cache_size()
+            out["anchor_fn"] = self._anchor_fn._cache_size()
+            return out
+        if self.engine == "vectorized" and self._fused:
+            out["round_fn"] = self._round_fn._cache_size()
+            return out
+        for c, fn in enumerate(self._device_phase_fns):
+            out[f"device_phase/{c}"] = fn._cache_size()
+        out["server_phase"] = self._server_phase_fn._cache_size()
+        return out
 
     # ------------------------------------------------------------------
     def sync(self) -> "FederatedRunner":
@@ -1213,8 +1533,10 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def close(self) -> None:
-        """Stop the overlap engine's prefetch worker (no-op for the other
-        engines).  Safe to call more than once."""
+        """Stop the overlap engine's prefetch worker and any background
+        eval-shard rebuild (no-op for the other engines).  Safe to call
+        more than once."""
+        self._join_eval_refresh()
         pf = getattr(self, "_prefetch", None)
         if pf is not None:
             self._prefetch = None
@@ -1236,6 +1558,7 @@ class FederatedRunner:
         (or the given per-cohort post-AMT stacked) device models.
         Stacked: one jitted scan-over-vmap per cohort over its padded eval
         shards; loop: reference host loop, one device at a time."""
+        self._join_eval_refresh()
         if self._stacked:
             out = []
             for c, rt in enumerate(self._cohorts):
@@ -1256,6 +1579,7 @@ class FederatedRunner:
         """Server (cloud LLM) metrics on the public test set — the SE-CCL
         evaluation.  N-independent; the stacked engines run it as one
         jitted scan so it cannot dominate small-N rounds."""
+        self._join_eval_refresh()
         if self._stacked:
             return seccl.metrics_from_sums(self._server_eval_fn(
                 self.server_llm, self._server_eval_steps))
@@ -1268,9 +1592,46 @@ class FederatedRunner:
         are snapshotted for reuse across rounds, so after mutating a test
         set call this — otherwise the stacked engines would keep evaluating
         the stale snapshot while the loop engine (which reads the
-        attributes live) sees the new data.  No-op on the loop engine."""
+        attributes live) sees the new data.  No-op on the loop engine.
+
+        Under the overlap engine the rebuild runs on a background thread
+        (batching + device_put are pure host work — they overlap the
+        in-flight round like the data prefetcher does) and is joined
+        before the next evaluation reads the stacks; results are
+        identical to the synchronous rebuild."""
         if not self._stacked:
             return
+        if (self.engine == "overlap"
+                and getattr(self, "_prefetch", None) is not None):
+            self._join_eval_refresh()
+            box = {"err": None}
+
+            def work():
+                try:
+                    self._build_eval_shards()
+                except BaseException as e:      # noqa: BLE001 — re-raised
+                    box["err"] = e              # at the join point
+
+            t = threading.Thread(target=work, name="eval-shard-refresh",
+                                 daemon=True)
+            box["thread"] = t
+            self._eval_refresh = box
+            t.start()
+            return
+        self._build_eval_shards()
+
+    def _join_eval_refresh(self) -> None:
+        """Wait for a pending background eval-shard rebuild (if any) and
+        surface its error on the caller's thread."""
+        box = getattr(self, "_eval_refresh", None)
+        if box is None:
+            return
+        self._eval_refresh = None
+        box["thread"].join()
+        if box["err"] is not None:
+            raise box["err"]
+
+    def _build_eval_shards(self) -> None:
         bs = self.cfg.batch_size
         for rt in self._cohorts:
             sl = rt.slice

@@ -12,20 +12,61 @@ Three forms:
     the cross-architecture combine happens on the shared-shape key subset
     only (:func:`combine_cohort_partials`) — Eq. 13 with globally
     normalized weights, renormalized per key by the participating mass.
+
+Robustness (unreliable/adversarial clients): every reduction takes an
+optional ``present`` survivor mask — a zero-weight *data* vector, never a
+shape change, so fault rounds reuse the clean round's single compiled
+trace — and the weight mass renormalizes over the surviving set (Eq. 13
+restricted to present clients).  :func:`aggregate_stacked` additionally
+offers two Byzantine-robust reductions: ``robust="trimmed_mean"``
+(coordinate-wise masked trimming, then the Eq. 13 weights renormalized
+over the kept mass) and ``robust="norm_clip"`` (per-client global update
+norms clipped to the masked median of the surviving norms, then the
+renormalized weighted mean).  Both are jit-safe masked reductions: the
+survivor count, trim ranks and clip threshold are traced values.  Robust
+reductions need the *per-client* uploads at the combine point — they are
+order statistics, fundamentally incompatible with pre-summed partials
+(and with secure-aggregation masked sums), so under ``robust != "mean"``
+the cohort form exchanges raw stacked uploads and reduces per shared key
+via :func:`robust_combine_cohorts` instead of partial sums.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.spec import ROBUST
 
-def aggregation_weights(n_modalities: Sequence[int]) -> jnp.ndarray:
-    """w_j = |M_j| / sum_i |M_i|   (Eq. 13)."""
+
+def _bcast(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a per-client (N,) vector to broadcast over leaf ``v``."""
+    return m.reshape(m.shape[:1] + (1,) * (v.ndim - 1))
+
+
+def aggregation_weights(n_modalities: Sequence[int],
+                        present=None) -> jnp.ndarray:
+    """w_j = |M_j| / sum_i |M_i|   (Eq. 13).
+
+    ``present`` (optional (N,) bool/float mask) restricts the mass to the
+    surviving clients: absent clients get weight exactly 0 and the
+    denominator renormalizes over the present set — Eq. 13 on the
+    survivors.  ``present=None`` is bit-for-bit the legacy computation.
+    """
     m = jnp.asarray(n_modalities, jnp.float32)
+    if present is not None:
+        m = m * jnp.asarray(present, jnp.float32)
     return m / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def renormalize(weights, present) -> jnp.ndarray:
+    """Mass-renormalize arbitrary weights over a survivor mask:
+    ``w*present / Σ(w*present)`` (safe when the surviving mass is 0 —
+    returns all zeros rather than NaN; callers guard delivery on that)."""
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(present, jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
 
 
 def aggregate(uploads: List[Dict[str, jnp.ndarray]],
@@ -66,7 +107,10 @@ def partial_aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
     return acc
 
 
-def aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
+def aggregate_stacked(uploads, weights, robust: str = "mean",
+                      present=None, trim_frac: float = 0.2,
+                      clip: Optional[float] = None
+                      ) -> Dict[str, jnp.ndarray]:
     """Eq. 13 over a device-stacked upload set — jit/vmap friendly.
 
     ``uploads`` is a :class:`repro.core.lora.StackedClients` (or a plain
@@ -78,10 +122,84 @@ def aggregate_stacked(uploads, weights) -> Dict[str, jnp.ndarray]:
     reproduces the loop engine's left-to-right order bitwise, and the
     aggregated volume (LoRA flat-dicts) is far too small for the O(N)
     depth to matter.
+
+    ``present`` masks out absent clients (weight exactly 0, mass
+    renormalized over the survivors); ``robust`` selects the reduction:
+
+    * ``"mean"`` — the Eq. 13 weighted average above (``present=None``
+      keeps the legacy path bit-for-bit);
+    * ``"trimmed_mean"`` — coordinate-wise masked trimming:
+      ``k = min(⌊trim_frac·m⌋, ⌊(m−1)/2⌋)`` values dropped from each end
+      of the m surviving clients per coordinate, then the Eq. 13 weights
+      renormalized over the kept mass;
+    * ``"norm_clip"`` — each surviving client's *global* L2 update norm
+      clipped to ``clip`` (default: the masked lower median of surviving
+      norms), folded into the weights as ``w_j·min(1, τ/‖u_j‖)`` so the
+      reduction stays the same deterministic scan.
+
+    All three are masked reductions over traced data — no shape depends
+    on the fault draw, so dropout/Byzantine rounds never retrace.
     """
     flat = getattr(uploads, "trainable", uploads)
-    acc = partial_aggregate_stacked(flat, weights)
-    return {k: acc[k].astype(flat[k].dtype) for k in flat}
+    if robust == "mean":
+        if present is not None:
+            weights = renormalize(weights, present)
+        acc = partial_aggregate_stacked(flat, weights)
+        return {k: acc[k].astype(flat[k].dtype) for k in flat}
+    n = next(iter(flat.values())).shape[0]
+    pres = (jnp.ones((n,), jnp.float32) if present is None
+            else jnp.asarray(present, jnp.float32))
+    w = jnp.asarray(weights, jnp.float32) * pres
+    if robust == "trimmed_mean":
+        return {k: _masked_trimmed_mean(v, w, pres, trim_frac)
+                .astype(v.dtype) for k, v in flat.items()}
+    if robust == "norm_clip":
+        scales = _clip_scales(flat, pres, clip)
+        acc = partial_aggregate_stacked(flat, renormalize(w, pres) * scales)
+        return {k: acc[k].astype(flat[k].dtype) for k in flat}
+    raise ValueError(f"unknown robust {robust!r}; expected one of {ROBUST}")
+
+
+def _masked_trimmed_mean(v: jnp.ndarray, w: jnp.ndarray, pres: jnp.ndarray,
+                         trim_frac: float) -> jnp.ndarray:
+    """Coordinate-wise masked trimmed mean over the leading client axis.
+
+    Absent clients sort to +inf (stable argsort ⇒ deterministic ties) and
+    can never enter the kept band ``k <= rank < m-k``; the kept values
+    average under the Eq. 13 weights renormalized per coordinate by the
+    kept mass.  ``m`` (survivors) and ``k`` are traced scalars — the
+    trim adapts to the round's dropout without retracing.
+    """
+    x = v.astype(jnp.float32)
+    pb = _bcast(pres, x) > 0
+    m = jnp.sum(pres)
+    k = jnp.minimum(jnp.floor(trim_frac * m), jnp.floor((m - 1.0) / 2.0))
+    order = jnp.argsort(jnp.where(pb, x, jnp.inf), axis=0)
+    ranks = jnp.argsort(order, axis=0).astype(jnp.float32)
+    keep = (ranks >= k) & (ranks < m - k) & pb
+    wk = _bcast(w, x) * keep
+    return jnp.sum(x * wk, axis=0) / jnp.maximum(jnp.sum(wk, axis=0), 1e-12)
+
+
+def _clip_scales(flat: Dict[str, jnp.ndarray], pres: jnp.ndarray,
+                 clip: Optional[float]) -> jnp.ndarray:
+    """Per-client norm-clip factors ``min(1, τ/‖u_j‖)`` over the GLOBAL
+    L2 norm of each client's whole upload (all keys), with τ the masked
+    lower median of the surviving norms unless a fixed ``clip`` is
+    given."""
+    sq = None
+    for v in flat.values():
+        x = v.astype(jnp.float32)
+        s = jnp.sum(x * x, axis=tuple(range(1, x.ndim)))
+        sq = s if sq is None else sq + s
+    norms = jnp.sqrt(sq)
+    if clip is None:
+        m = jnp.sum(pres).astype(jnp.int32)
+        srt = jnp.sort(jnp.where(pres > 0, norms, jnp.inf))
+        tau = srt[jnp.maximum((m - 1) // 2, 0)]
+    else:
+        tau = jnp.float32(clip)
+    return jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
 
 
 def combine_cohort_partials(partials: Sequence[Dict[str, jnp.ndarray]],
@@ -104,6 +222,13 @@ def combine_cohort_partials(partials: Sequence[Dict[str, jnp.ndarray]],
     With one cohort holding every key this reduces to the plain global
     Eq. 13 aggregate.  ``out_dtypes`` maps keys to the server-side leaf
     dtype for the final cast.
+
+    Under client faults the per-round weights are pre-masked, so
+    ``w_totals`` are the *surviving* per-cohort masses — the division is
+    the mass renormalization over present clients.  A key whose every
+    participating cohort lost all its clients this round has mass 0 and
+    is omitted (``lora.combine`` then leaves the server's previous value
+    untouched — no aggregation happened for that key).
     """
     participants: Dict[str, list] = {}
     for c, ks in enumerate(shared_keys):
@@ -112,11 +237,62 @@ def combine_cohort_partials(partials: Sequence[Dict[str, jnp.ndarray]],
     out = {}
     for k in sorted(participants):
         cs = participants[k]
+        mass = np.float32(sum(float(w_totals[c]) for c in cs))
+        if not mass > 0.0:
+            continue
         acc = partials[cs[0]][k]
         for c in cs[1:]:
             acc = acc + partials[c][k]
-        mass = np.float32(sum(float(w_totals[c]) for c in cs))
         out[k] = (acc / mass).astype(out_dtypes[k])
+    return out
+
+
+def robust_combine_cohorts(uploads: Sequence[Dict[str, jnp.ndarray]],
+                           weights: Sequence[np.ndarray],
+                           shared_keys: Sequence[Sequence[str]],
+                           out_dtypes: Dict,
+                           robust: str,
+                           present: Optional[Sequence] = None,
+                           trim_frac: float = 0.2,
+                           clip: Optional[float] = None
+                           ) -> Dict[str, jnp.ndarray]:
+    """Cross-cohort robust aggregation on the shared-shape key subset.
+
+    The robust counterpart of :func:`combine_cohort_partials`: order
+    statistics cannot be computed from pre-summed partials, so
+    ``uploads[c]`` is cohort ``c``'s RAW stacked upload dict ``(n_c, …)``
+    and, per shared key, the participating cohorts' client axes are
+    concatenated (cohort order — deterministic across engines) and
+    reduced with :func:`aggregate_stacked`'s masked robust reduction.
+    ``weights[c]`` are the cohort's globally-normalized (fault-masked)
+    Eq. 13 weights; renormalization over the key's participating mass
+    happens inside the reduction, preserving the convex-combination
+    property of the mean path.  Note ``norm_clip`` here clips per *key*
+    (a global-across-keys norm is undefined when cohorts share different
+    subsets).  Zero-participating-mass keys are omitted, like the mean
+    combine.
+    """
+    participants: Dict[str, list] = {}
+    for c, ks in enumerate(shared_keys):
+        for k in ks:
+            participants.setdefault(k, []).append(c)
+    pres = list(present) if present is not None else [None] * len(uploads)
+    out = {}
+    for k in sorted(participants):
+        cs = participants[k]
+        cat = jnp.concatenate([jnp.asarray(uploads[c][k]) for c in cs],
+                              axis=0)
+        wcat = np.concatenate([np.asarray(weights[c], np.float32)
+                               for c in cs])
+        pcat = np.concatenate([
+            np.ones(len(np.asarray(weights[c])), np.float32)
+            if pres[c] is None else np.asarray(pres[c], np.float32)
+            for c in cs])
+        if not float((wcat * pcat).sum()) > 0.0:
+            continue
+        out[k] = aggregate_stacked(
+            {k: cat}, wcat, robust=robust, present=pcat,
+            trim_frac=trim_frac, clip=clip)[k].astype(out_dtypes[k])
     return out
 
 

@@ -45,6 +45,8 @@ from repro.configs.base import ModelConfig
 MODES = ("mlecs", "standalone", "fedavg")
 ENGINES = ("loop", "vectorized", "overlap")
 CCL_SCORES = ("volume", "cosine")
+ROBUST = ("mean", "trimmed_mean", "norm_clip")
+ATTACKS = ("none", "label_flip", "scaled_update")
 
 # per-cohort MER mask streams: cohort c draws from seed + c * _MASK_SEED_STRIDE
 # (cohort 0 uses the spec seed itself, so single-cohort specs reproduce the
@@ -53,7 +55,8 @@ _MASK_SEED_STRIDE = 7919
 
 
 def validate_protocol(mode: str, engine: str, ccl_score: str,
-                      staleness: int) -> None:
+                      staleness: int, robust: str = "mean",
+                      trim_frac: float = 0.2) -> None:
     """Reject invalid protocol knobs at construction time.
 
     An unknown ``mode`` is the dangerous one: it silently passes the
@@ -77,6 +80,72 @@ def validate_protocol(mode: str, engine: str, ccl_score: str,
         raise ValueError(
             f"staleness={staleness} requires engine='overlap' (the other "
             "engines have no pipeline to lag); got engine=" + repr(engine))
+    if robust not in ROBUST:
+        raise ValueError(
+            f"unknown robust {robust!r}; expected one of {ROBUST}")
+    if not (0.0 <= trim_frac < 0.5):
+        raise ValueError(
+            f"trim_frac must be in [0, 0.5) — trimming half the clients "
+            f"from each end leaves nothing to average; got {trim_frac}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """The unreliable-client model, drawn per round from its own seed
+    stream (:class:`repro.core.faults.FaultSchedule`), independent of the
+    data/init seeds so fault scenarios replay the exact clean run.
+
+    * ``dropout`` — per-round probability a client is offline for the
+      whole round: it trains nothing (its state is frozen), its upload is
+      excluded, and it misses that round's redistribution.  MMA mass
+      renormalizes over the survivors (Eq. 13 on the present set).
+    * ``straggler`` / ``max_delay`` — per-round probability a straggle
+      event starts, lasting ``d ~ U{1..max_delay}`` rounds.  A straggling
+      client keeps training and keeps receiving deliveries, but its
+      uploads miss the aggregation deadline while the event lasts (under
+      the overlap engine this composes with the ``staleness`` pipeline —
+      per-client staleness on top of the global server lag).
+    * ``byzantine`` — fraction of clients (a fixed set, drawn once) that
+      attack: ``"label_flip"`` poisons their private *training* shards in
+      the data layer (:func:`repro.data.attacks.label_flip`); the honest
+      protocol then federates sincerely-computed-but-wrong updates.
+      ``"scaled_update"`` reports ``attack_scale ×`` the true LoRA upload
+      (:func:`repro.data.attacks.scaled_update`) — the classic
+      model-poisoning amplification that plain weighted averaging cannot
+      survive but ``robust="trimmed_mean"|"norm_clip"`` can.
+
+    Every draw is data, not shape: the engines consume the masks as
+    zero-weight vectors inside their one compiled round, so fault rounds
+    never retrace after warm-up.
+    """
+
+    dropout: float = 0.0
+    straggler: float = 0.0
+    max_delay: int = 1
+    byzantine: float = 0.0
+    attack: str = "none"
+    attack_scale: float = 10.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("dropout", "straggler"):
+            v = getattr(self, name)
+            if not (0.0 <= v < 1.0):
+                raise ValueError(f"{name} must be in [0, 1); got {v}")
+        if not (0.0 <= self.byzantine <= 1.0):
+            raise ValueError(
+                f"byzantine must be in [0, 1]; got {self.byzantine}")
+        if self.max_delay < 1:
+            raise ValueError("max_delay must be >= 1 round")
+        if self.attack not in ATTACKS:
+            raise ValueError(
+                f"unknown attack {self.attack!r}; expected one of {ATTACKS}")
+        if self.attack_scale <= 0.0:
+            raise ValueError("attack_scale must be > 0")
+        if self.byzantine > 0.0 and self.attack == "none":
+            raise ValueError(
+                "byzantine > 0 needs an attack ('label_flip' or "
+                "'scaled_update'); use byzantine=0 for honest clients")
 
 
 def _cdim(cfg: ModelConfig) -> int:
@@ -161,6 +230,10 @@ class FederationSpec:
     kt_weight: float = 0.5
     prox_weight: float = 0.0
     ccl_score: str = "volume"
+    robust: str = "mean"             # MMA reduction: mean (Eq. 13) |
+                                     # trimmed_mean | norm_clip
+    trim_frac: float = 0.2           # fraction trimmed from EACH end
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self):
         cohorts = tuple(self.cohorts)
@@ -168,7 +241,7 @@ class FederationSpec:
             raise ValueError("FederationSpec needs at least one cohort")
         object.__setattr__(self, "cohorts", cohorts)
         validate_protocol(self.mode, self.engine, self.ccl_score,
-                          self.staleness)
+                          self.staleness, self.robust, self.trim_frac)
         if not (0.0 <= self.rho <= 1.0):
             raise ValueError("rho must be in [0, 1]")
         # anchored CCL and cross-cohort aggregation need ONE connector
@@ -281,4 +354,4 @@ _PROTOCOL_FIELDS = (
     "rounds", "local_steps_ccl", "local_steps_amt", "server_steps",
     "batch_size", "lr", "rho", "n_negatives", "seed", "engine", "staleness",
     "use_mma", "use_seccl", "use_ccl", "mode", "kt_weight", "prox_weight",
-    "ccl_score")
+    "ccl_score", "robust", "trim_frac", "faults")

@@ -1,5 +1,6 @@
 """Data layer: synthetic multimodal corpora, the MER partition, and the
 train/eval batching pipelines shared by both federated engines."""
+from repro.data.attacks import label_flip, scaled_update
 from repro.data.synthetic import synthetic_multimodal_corpus
 from repro.data.multimodal import mer_partition, paper_split
 from repro.data.pipeline import (batches, eval_batches, np_eval_batches,

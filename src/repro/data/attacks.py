@@ -1,0 +1,67 @@
+"""Byzantine attack generators for the synthetic data layer.
+
+Two canonical attacks against federated aggregation, matched to what the
+robust MMA variants (:func:`repro.core.mma.aggregate_stacked` with
+``robust="trimmed_mean"|"norm_clip"``) are supposed to survive:
+
+* :func:`label_flip` — data poisoning.  The compromised client's private
+  *training* shard gets its latent classes re-labelled (and the target
+  template region of the tokens rewritten to match the wrong class), so
+  the client then runs the honest protocol on sincerely-wrong data.  Its
+  uploads are statistically ordinary in magnitude — norm clipping barely
+  notices them; mass renormalization and trimming are the defenses.
+* :func:`scaled_update` — model poisoning.  The client trains honestly
+  but reports ``scale ×`` its true LoRA upload, the classic amplification
+  that a single client can use to steer a plain weighted average
+  arbitrarily.  Extreme per-coordinate and per-norm, so both trimming and
+  norm clipping neutralize it.
+
+Both are deterministic given their seed/scale, and neither touches test
+shards — degradation is always measured on clean held-out data.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def label_flip(shard: Dict[str, np.ndarray], seed: int = 0
+               ) -> Dict[str, np.ndarray]:
+    """Poison one private shard: each row's class label moves to a
+    uniformly-drawn *different* class and the template token region is
+    rewritten to that class's template (``loss_mask`` and the modality
+    features keep describing the TRUE class — the supervision, not the
+    evidence, is corrupted).  Returns a new dict; the input is untouched.
+    """
+    templates = np.asarray(shard["templates"])
+    n_classes, template_len = templates.shape
+    labels = np.asarray(shard["label"])
+    n = labels.shape[0]
+    out = dict(shard)
+    if n == 0 or n_classes < 2:
+        return out
+    rng = np.random.default_rng([seed, 0xFA15E])
+    shift = rng.integers(1, n_classes, size=n)
+    flipped = ((labels + shift) % n_classes).astype(labels.dtype)
+    tokens = np.array(shard["tokens"], copy=True)
+    starts = np.asarray(shard["template_start"])
+    cols = starts[:, None] + np.arange(template_len)[None, :]
+    tokens[np.arange(n)[:, None], cols] = templates[flipped]
+    out["tokens"] = tokens
+    out["label"] = flipped
+    return out
+
+
+def scaled_update(upload: Dict, scale: float) -> Dict:
+    """Model-poisoning upload: report ``scale × u`` instead of ``u``.
+
+    Host/list form of the attack; inside the compiled rounds the engines
+    apply the same multiplication as a per-client scale *vector* (1.0 for
+    honest clients) so Byzantine rounds stay a single trace.  The product
+    is computed in f32 and rounded back to the upload dtype — exactly the
+    stacked engines' op sequence, so the loop reference matches bitwise
+    even at bf16 (a native-bf16 multiply can double-round differently).
+    """
+    return {k: (v.astype(np.float32) * np.float32(scale)).astype(v.dtype)
+            for k, v in upload.items()}

@@ -141,6 +141,40 @@ def test_engine_eos_and_budget_clamp():
     assert len(done2[r].out) == 1 and int(done2[r].out[0]) == eos
 
 
+def test_engine_page_pool_exhaustion_mid_flight():
+    """A request that fits the block table but NOT the current free pool
+    must wait — even with a slot free — and be admitted the tick after an
+    eviction returns its pages, with greedy output unaffected."""
+    cfg = _cfg(**FAMS["dense"])
+    b = build_model(cfg)
+    params = b.init(jax.random.key(0))
+    # 5 usable pages (page 0 = scratch); each request needs 4, so the
+    # second queues on pages despite the second slot being free
+    econf = EngineConfig(n_slots=2, page_size=4, n_pages=6,
+                         max_pages_per_seq=4, max_out=8, buckets=(8,))
+    engine = ServingEngine(b, params, econf)
+    rng = np.random.RandomState(1)
+    reqs = [(rng.randint(0, cfg.vocab_size, (5,)).astype(np.int32), 6)
+            for _ in range(2)]
+    rids = [engine.submit(t, max_new=m) for t, m in reqs]
+
+    engine.tick()
+    assert len(engine._slot_req) == 1 and len(engine.pending) == 1
+    assert len(engine._free_slots) == 1          # blocked on pages, not slots
+    while engine.pending:                        # first eviction unblocks it
+        assert len(engine._slot_req) <= 1
+        engine.tick()
+    assert rids[0] in engine.finished            # admission followed eviction
+    done = engine.run()
+    assert sorted(done) == sorted(rids)
+    for rid, (toks, m) in zip(rids, reqs):
+        want = generate(b, params, jnp.asarray(toks)[None], max_new=m)
+        assert done[rid].out.tolist() == np.asarray(want[0]).tolist()
+    # every page and slot returned to the free lists
+    assert sorted(engine._free_pages) == list(range(1, econf.n_pages))
+    assert sorted(engine._free_slots) == [0, 1]
+
+
 def test_engine_admission_overflow_raises():
     cfg = _cfg(**FAMS["dense"])
     b = build_model(cfg)
