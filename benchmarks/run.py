@@ -18,7 +18,7 @@ import sys
 import time
 
 BENCHES = ["table1", "table2", "fig3", "fig4", "gram_ablation",
-           "robustness", "roofline", "microbench"]
+           "robustness", "population", "roofline", "microbench"]
 _MODULES = {
     "table1": "table1_performance",
     "table2": "table2_scalability",
@@ -26,6 +26,7 @@ _MODULES = {
     "fig4": "fig4_ablation",
     "gram_ablation": "gram_ablation",
     "robustness": "robustness",
+    "population": "population_scaling",
     "roofline": "roofline",
     "microbench": "microbench",
 }

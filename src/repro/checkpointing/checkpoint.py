@@ -14,7 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _flatten(tree):
+def flatten_pytree(tree):
+    """Flatten to a ``{"/".join(path): leaf}`` dict — the key scheme every
+    checkpoint artifact (run state, per-client :class:`repro.core.store`
+    entries) uses on disk, exposed for tools that inspect them."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
@@ -22,6 +25,9 @@ def _flatten(tree):
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         out[key] = leaf
     return out
+
+
+_flatten = flatten_pytree
 
 
 def save_pytree(path: str, tree: Any) -> None:
@@ -55,8 +61,7 @@ def load_pytree(path: str, like: Any) -> Any:
         return jnp.asarray(arr)
 
     restored = {k: restore(k) for k in flat_like}
-    leaves_like, treedef = jax.tree_util.tree_flatten(like)
-    keys = sorted(_flatten(like).keys())
+    treedef = jax.tree_util.tree_structure(like)
     # rebuild in the flatten order of `like`
     flat_paths = [
         "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

@@ -48,10 +48,11 @@ Three interchangeable engines drive a round:
   MMA weighting + aggregation as stacked contractions, the cross-cohort
   shared-subset combine, SE-CCL scanned on the server, and redistribution
   as per-cohort broadcasts — uploads never materialize as Python lists.
-  Per-device data comes pre-batched from
-  :func:`repro.data.pipeline.stacked_batches` (one iterator per cohort),
-  which replays the exact per-device shuffle streams of the loop engine,
-  so the engines see identical data and agree on round summaries to ~1e-5.
+  Per-device data comes pre-batched from the per-GLOBAL-client stream
+  bank (:class:`repro.data.pipeline.ClientStreams` — one shuffle stream
+  per registered client), which replays the exact per-device shuffle
+  streams of the loop engine, so the engines see identical data and agree
+  on round summaries to ~1e-5.
   With a ``mesh``, every cohort's stacked axis is placed on the "data"
   mesh axis (``NamedSharding``) so clients parallelize across chips; on
   the single-device host mesh the placement is a no-op and results are
@@ -89,6 +90,32 @@ call, plus the N-independent SE-CCL server evaluation as one jitted scan.
 Round metrics list clients in global order (cohorts are contiguous index
 ranges), so single-cohort outputs are byte-identical to the legacy runner.
 
+**Registered population vs per-round working set.**  A
+:class:`~repro.core.spec.ParticipantSampler` on the spec splits client
+state into two layers: the full population's personal state (trainable
+LoRA/connector leaves + optimizer moments) lives host/disk-side in a
+:class:`repro.core.store.ClientStore`, while the engines keep only a
+FIXED-size stacked working set on device.  Each round,
+:class:`repro.core.store.ParticipantSchedule` draws the participants
+(stateless replay from ``(seed, round)``, like the fault schedule), the
+runner *gathers* their rows from the store into the stacked buffers (the
+shared frozen backbone never moves), runs the unchanged jitted round
+machinery on Eq. 13 weights renormalized over the sampled set
+(:func:`repro.core.mma.sampled_weights` — composing with the fault
+model's survivor renormalization), and *scatters* the trained rows back.
+Membership enters jit as DATA (gather indices, weight vectors, masks),
+never as shapes — resampling adds zero recompilations after warm-up
+(assert via :meth:`FederatedRunner.jit_cache_sizes`) — and device memory
+scales with the working set, not the registered N.  The overlap engine
+additionally stages round r+1's store gather on a background thread.  A
+sampler covering the full population reproduces the unsampled engines
+bit-for-bit.  :meth:`FederatedRunner.save_checkpoint` /
+:meth:`~FederatedRunner.load_checkpoint` round-trip the whole run state
+(round counter, server, population) through
+:class:`repro.checkpointing.CheckpointManager`; restore replays sampler
+draws and data-stream positions from the round counter alone, so resumed
+rounds are bit-identical to the uninterrupted run.
+
 Ablation switches (use_mma / use_seccl / use_ccl) give the paper's Fig. 4
 variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
 """
@@ -108,13 +135,14 @@ from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
 from repro.core.faults import FaultSchedule
 from repro.core.spec import (CCL_SCORES, ENGINES, MODES, ClientCohort,
-                             FaultSpec, FederationSpec, validate_protocol)
+                             FaultSpec, FederationSpec, ParticipantSampler,
+                             validate_protocol)
+from repro.core.store import ClientStore, ParticipantSchedule
 from repro.data import attacks
 from repro.data.multimodal import paper_split, take_fraction, train_test_split
-from repro.data.pipeline import (RoundPrefetcher, batches, eval_batches,
-                                 np_batches, np_eval_batches,
-                                 stack_eval_steps, stack_steps,
-                                 stacked_batches, stacked_eval_batches)
+from repro.data.pipeline import (ClientStreams, RoundPrefetcher, eval_batches,
+                                 np_eval_batches, stack_eval_steps,
+                                 stacked_eval_batches)
 from repro.models.model import ModelBundle, build_model
 from repro.optim.adamw import adamw, apply_updates
 from repro.sharding import partition as shard_part
@@ -214,6 +242,10 @@ class FederatedConfig:
     trim_frac: float = 0.2           # trimmed_mean: fraction cut per end
     faults: Optional[FaultSpec] = None   # unreliable-client model (None =
                                      # every client honest and always on)
+    sampler: Optional[ParticipantSampler] = None  # per-round participant
+                                     # sampling over the registered
+                                     # population (None = all clients
+                                     # participate every round)
 
     def __post_init__(self):
         if self.n_devices < 1:
@@ -241,11 +273,23 @@ class _Cohort:
         self.shared: Tuple[str, ...] = ()   # server-shape-matching LoRA keys
         self.own: Tuple[str, ...] = ()      # cohort-local LoRA keys
         self.last_global = None      # last delivery (prox/redistribution ref)
+        # per-round working set (== the full membership without a sampler):
+        # the stacked buffers hold work_n clients, and every per-round
+        # vector (weights/presence/scale) is indexed by work_slice
+        self.work_n = spec.n_clients
+        self.work_offset = offset
+        self.eval_cache: Dict = {}   # sampled-eval shards keyed by members
 
     @property
     def slice(self) -> slice:
         """Global client-index slice of this cohort's members."""
         return slice(self.offset, self.offset + self.n)
+
+    @property
+    def work_slice(self) -> slice:
+        """This cohort's block of the round's working-set vectors — equal
+        to :attr:`slice` without a sampler (working set = population)."""
+        return slice(self.work_offset, self.work_offset + self.work_n)
 
 
 class FederatedRunner:
@@ -266,7 +310,8 @@ class FederatedRunner:
     disjoint device sets) gives each cohort its own device slice so
     heterogeneous cohorts run concurrently."""
 
-    def __init__(self, spec, *args, mesh=None, engine: Optional[str] = None):
+    def __init__(self, spec, *args, mesh=None, engine: Optional[str] = None,
+                 store_dir: Optional[str] = None):
         if isinstance(spec, FederationSpec):
             if not args:
                 raise TypeError(
@@ -351,10 +396,23 @@ class FederatedRunner:
         self._faults = (FaultSchedule(spec.faults, N)
                         if spec.faults is not None else None)
         self._round_idx = 0
-        self._rnd_present = None     # (N,) bool — training + delivery mask
-        self._rnd_contrib = None     # (N,) bool — aggregation mask
-        self._rnd_weights = None     # (N,) f32 — survivor-renormalized
+        self._rnd_present = None     # (S,) bool — training + delivery mask
+        self._rnd_contrib = None     # (S,) bool — aggregation mask
+        self._rnd_weights = None     # (S,) f32 — survivor-renormalized
         self._attack_scale = None    # (N,) f32 — scaled-update vector
+        # participant sampling: the registered population (ClientStore)
+        # vs the per-round working set (the stacked buffers).  Per-round
+        # vectors above are working-set sized (S == N without a sampler).
+        self._schedule = (ParticipantSchedule(
+            spec.sampler, [c.n_clients for c in spec.cohorts], spec.offsets)
+            if spec.sampler is not None else None)
+        self._store = (ClientStore(directory=store_dir)
+                       if self._schedule is not None else None)
+        self._rnd_locals = None      # per-cohort sampled LOCAL indices
+        self._rnd_ids = None         # (S,) sampled GLOBAL client ids
+        self._rnd_no = None          # the round index the draws belong to
+        self._rnd_scale = None       # (S,) per-round attack-scale gather
+        self._assemble_idx = 0       # rounds assembled (prefetch runs ahead)
         if self._faults is not None:
             fl = spec.faults
             if fl.attack == "label_flip":
@@ -367,10 +425,28 @@ class FederatedRunner:
                     self._faults.byzantine, fl.attack_scale,
                     1.0).astype(np.float32)
 
-        # models (per-cohort architectures; global key schedule)
-        device_params = [
-            ccl_lib.init_unified(keys[j], bundles[spec.cohort_of(j)])
-            for j in range(N)]
+        # models (per-cohort architectures; global key schedule).  Every
+        # cohort member shares ONE frozen backbone — the deployed
+        # pretrained architecture, drawn from the cohort's first member
+        # key — while each member's personal (trainable: LoRA + connector
+        # + frontend) leaves still draw from its own keys[j] stream.  The
+        # per-client state that federation moves, stores and checkpoints
+        # is therefore exactly the personal subset: a registered
+        # population costs one backbone per cohort plus N personal sets,
+        # not N full models.
+        self._cohort_bases = [
+            ccl_lib.init_unified(keys[spec.offsets[c]], bundles[c])
+            for c in range(spec.n_cohorts)]
+        device_params = []
+        for j in range(N):
+            c = spec.cohort_of(j)
+            if j == spec.offsets[c]:
+                device_params.append(self._cohort_bases[c])
+            else:
+                device_params.append(lora.combine(
+                    self._cohort_bases[c],
+                    lora.partition(ccl_lib.init_unified(keys[j],
+                                                        bundles[c]))))
         self.server_llm = ccl_lib.init_unified(keys[-1], self.llm)
         self.server_slm = ccl_lib.init_unified(keys[-2], srv_slm_bundle)
 
@@ -378,6 +454,15 @@ class FederatedRunner:
         opt = adamw(cfg.lr, weight_decay=0.0)
         self.opt = opt
         device_opt = [opt.init(lora.partition(p)) for p in device_params]
+
+        # registered population: push every client's personal state into
+        # the host/disk-resident store; the engines then gather each
+        # round's sampled working set into the stacked buffers and scatter
+        # the updates back (device memory scales with the working set)
+        if self._store is not None:
+            for j in range(N):
+                self._store.put(j, {"train": lora.partition(device_params[j]),
+                                    "opt": device_opt[j]})
         self.server_llm_opt = opt.init(lora.partition(self.server_llm))
         self.server_slm_opt = opt.init(lora.partition(self.server_slm))
 
@@ -410,6 +495,11 @@ class FederatedRunner:
             rt.own_dtypes = {k: up0[k].dtype for k in rt.own}
             rt.last_global = {k: server_lora[k] for k in rt.shared}
             self._cohorts.append(rt)
+        if self._schedule is not None:
+            woff = 0
+            for rt, k in zip(self._cohorts, self._schedule.counts):
+                rt.work_n, rt.work_offset = k, woff
+                woff += k
         # the legacy fast path needs FULL key coverage, not just one
         # cohort: a single cohort whose server_slm has a different shape
         # (partial overlap) must still go through the shared-subset
@@ -425,28 +515,45 @@ class FederatedRunner:
         # across engines), so robust != "mean" takes the split schedule
         self._fused = self._homogeneous and cfg.robust == "mean"
 
-        bs = cfg.batch_size
+        # the stream bank: one infinite shuffle stream per GLOBAL client id
+        # (plus the server's), pulled only for the clients a round actually
+        # touches — a client resuming participation continues its own
+        # stream.  Every engine reads the same bank, so the pre-bank
+        # per-engine iterators are replayed bit-for-bit.
+        self._streams = ClientStreams()
+        for j in range(N):
+            c = spec.cohort_of(j)
+            bs_c = spec.cohort_batch_size(c)
+            self._streams.register(f"pub/{j}", self.public_train, bs_c,
+                                   cfg.seed + 100 + j, self.masks[j])
+            self._streams.register(f"priv/{j}", self.priv_train[j], bs_c,
+                                   cfg.seed + 200 + j, self.masks[j])
+        self._streams.register("server", self.public_train, cfg.batch_size,
+                               cfg.seed + 999)
+
         if self.engine in ("vectorized", "overlap"):
             for rt in self._cohorts:
                 sl = rt.slice
-                rt.stacked_params = lora.stack_trees(device_params[sl])
-                rt.stacked_opt = lora.stack_trees(device_opt[sl])
-                # device-stacked iterators replaying the loop engine's
-                # per-GLOBAL-client shuffle streams
-                rt.pub_stacked = stacked_batches(
-                    [self.public_train] * rt.n, bs,
-                    [cfg.seed + 100 + j for j in range(rt.offset,
-                                                       rt.offset + rt.n)],
-                    self.masks[sl])
-                rt.priv_stacked = stacked_batches(
-                    self.priv_train[sl], bs,
-                    [cfg.seed + 200 + j for j in range(rt.offset,
-                                                       rt.offset + rt.n)],
-                    self.masks[sl])
-                rt.client_eval_fn = seccl.make_eval_fn(rt.bundle,
-                                                       n_clients=rt.n)
-            self._server_np_iter = np_batches(self.public_train, bs,
-                                              cfg.seed + 999)
+                if self._schedule is None:
+                    rt.stacked_params = lora.stack_trees(device_params[sl])
+                    rt.stacked_opt = lora.stack_trees(device_opt[sl])
+                else:
+                    # fixed-size working-set buffers, seeded with round
+                    # 0's prospective draw (so pre-run evaluation sees the
+                    # state round 0 will train); each round's gather
+                    # re-splices only the personal leaves — the shared
+                    # frozen backbone in the buffer never moves again
+                    loc0 = self._schedule.round_locals(0)[rt.idx]
+                    rt.stacked_params = lora.stack_trees(
+                        [device_params[rt.offset + int(i)] for i in loc0])
+                    rt.stacked_opt = lora.stack_trees(
+                        [device_opt[rt.offset + int(i)] for i in loc0])
+                bs_c = spec.cohort_batch_size(rt.idx)
+                rt.eval_blocks = max(
+                    -(-self.priv_test[j]["tokens"].shape[0] // bs_c)
+                    for j in range(rt.offset, rt.offset + rt.n))
+                rt.client_eval_fn = seccl.make_eval_fn(
+                    rt.bundle, n_clients=rt.work_n)
             # evaluation: the test sets normally never change, so the
             # padded device-stacked eval shards (and the server's
             # public-test stack) are built once and reused every round —
@@ -478,29 +585,20 @@ class FederatedRunner:
         else:
             for rt in self._cohorts:
                 sl = rt.slice
-                rt.device_params = device_params[sl]
-                rt.device_opt = device_opt[sl]
+                if self._schedule is None:
+                    rt.device_params = device_params[sl]
+                    rt.device_opt = device_opt[sl]
                 rt.dev_ccl_step = ccl_lib.make_local_step(
                     rt.bundle, opt, ccl_weight=_ccl_weight(cfg),
                     n_negatives=cfg.n_negatives, ccl_score=cfg.ccl_score)
                 rt.dev_amt_step = ccl_lib.make_local_step(
                     rt.bundle, opt, ccl_weight=0.0, with_anchor=False,
                     prox_weight=cfg.prox_weight)
-                rt.pub_iters = [
-                    batches(self.public_train, bs, cfg.seed + 100 + j,
-                            self.masks[j])
-                    for j in range(rt.offset, rt.offset + rt.n)]
-                rt.priv_iters = [
-                    batches(self.priv_train[j], bs, cfg.seed + 200 + j,
-                            self.masks[j])
-                    for j in range(rt.offset, rt.offset + rt.n)]
                 # reference evaluation: host loop over per-batch jitted
                 # steps sharing the stacked engines' exact metric definition
                 rt.eval_step = jax.jit(seccl.make_eval_step(rt.bundle))
             self._anchor_fn = jax.jit(
                 lambda p, b: ccl_lib.server_anchors(p, self.llm, b))
-            self.pub_iter_server = batches(self.public_train, bs,
-                                           cfg.seed + 999)
             self._llm_eval_step = jax.jit(seccl.make_eval_step(self.llm))
         self.history: List[Dict] = []
 
@@ -526,6 +624,12 @@ class FederatedRunner:
         return self._cohorts[0]
 
     @property
+    def store(self):
+        """The registered-population :class:`~repro.core.store.ClientStore`
+        (None without a sampler — all client state is then resident)."""
+        return self._store
+
+    @property
     def stacked_params(self):
         """Legacy single-cohort view of the device-stacked parameters."""
         return self._single().stacked_params
@@ -543,7 +647,11 @@ class FederatedRunner:
     @property
     def device_params(self) -> List:
         """Per-device full parameter trees in GLOBAL client order
-        (unstacked views under the stacked engines)."""
+        (unstacked views under the stacked engines; materialized from the
+        store — shared frozen base + personal leaves — under a sampler)."""
+        if self._schedule is not None:
+            return [self._loop_client_state(rt, i)[0]
+                    for rt in self._cohorts for i in range(rt.n)]
         if self._stacked:
             return [p for rt in self._cohorts
                     for p in lora.unstack_tree(rt.stacked_params, rt.n)]
@@ -552,7 +660,11 @@ class FederatedRunner:
     @property
     def device_opt(self) -> List:
         """Per-device optimizer states in global client order (unstacked
-        views under the stacked engines)."""
+        views under the stacked engines; from the store under a
+        sampler)."""
+        if self._schedule is not None:
+            return [self._loop_client_state(rt, i)[1]
+                    for rt in self._cohorts for i in range(rt.n)]
         if self._stacked:
             return [o for rt in self._cohorts
                     for o in lora.unstack_tree(rt.stacked_opt, rt.n)]
@@ -597,19 +709,60 @@ class FederatedRunner:
     # per-round fault state (no-ops without a FaultSpec)
 
     def _begin_round(self) -> None:
-        """Advance the fault schedule: draw this round's presence/straggle
-        masks and mass-renormalize the Eq. 13 weights over the surviving
-        (present AND on-time) set.  Called exactly once at the top of every
-        engine's round; fault-free runs keep the static init-time weights
-        and pay nothing."""
-        if self._faults is None:
-            return
+        """Advance the round counter and draw this round's host-side state:
+        the sampled participant set (when a sampler is configured), the
+        fault schedule's presence/straggle masks restricted to it, and the
+        Eq. 13 weights renormalized over the round's *contributing* set —
+        sampled AND present AND on-time, one mass rule.  Everything drawn
+        here is host data the compiled rounds consume as gather indices /
+        zero-weight masks, never shapes, so resampling and fault draws
+        reuse the warm traces.  Called exactly once at the top of every
+        engine's round; fault-free full-participation runs keep the static
+        init-time weights and pay nothing."""
         cfg = self.cfg
-        present, ontime = self._faults.round_masks(self._round_idx)
+        rnd = self._round_idx
         self._round_idx += 1
+        self._rnd_no = rnd
+        ids = None
+        if self._schedule is not None:
+            self._rnd_locals = self._schedule.round_locals(rnd)
+            self._rnd_ids = ids = np.concatenate([
+                off + loc for off, loc in zip(self.spec.offsets,
+                                              self._rnd_locals)])
+            self._rnd_scale = (self._attack_scale[ids]
+                               if self._attack_scale is not None else None)
+        if self._faults is None:
+            if ids is None:
+                return
+            # sampler without faults: weights renormalized over the
+            # sampled set (the identity sampler reproduces the static
+            # init-time weights bit-for-bit); presence stays None so the
+            # phase functions keep their mask-free traces
+            if cfg.use_mma and cfg.mode == "mlecs":
+                w = mma.sampled_weights(self._mod_counts, ids)
+            else:
+                w = jnp.ones((len(ids),)) / len(ids)
+            self._rnd_weights = np.asarray(w, np.float32)
+            return
+        present, ontime = self._faults.round_masks(rnd)
+        if ids is not None:
+            present = present[ids].copy()
+            ontime = ontime[ids].copy()
+            if not bool((present & ontime).any()):
+                # a sampled set whose every member failed must not push an
+                # all-zero weight vector through the server landing (it
+                # would zero the server SLM's LoRA); resurrect one member
+                # — its upload equals its pre-round params, so the
+                # aggregate is stale-but-sane
+                present[0] = ontime[0] = True
         contrib = present & ontime
         if cfg.use_mma and cfg.mode == "mlecs":
-            w = mma.aggregation_weights(self._mod_counts, present=contrib)
+            if ids is None:
+                w = mma.aggregation_weights(self._mod_counts,
+                                            present=contrib)
+            else:
+                w = mma.sampled_weights(self._mod_counts, ids,
+                                        present=contrib)
         else:
             w = contrib.astype(np.float32) / max(int(contrib.sum()), 1)
         self._rnd_present = present
@@ -625,24 +778,35 @@ class FederatedRunner:
 
     def _weights_for(self, rt: _Cohort):
         """The weight slice a device phase consumes this round — traced
-        DATA, so fault rounds reuse the phase's one compiled trace."""
+        DATA, so fault/sampling rounds reuse the phase's one compiled
+        trace.  Per-round vectors are working-set sized; ``work_slice``
+        equals the population slice without a sampler."""
         if self._rnd_weights is None:
             return rt.weights
-        return jnp.asarray(self._rnd_weights[rt.slice])
+        return jnp.asarray(self._rnd_weights[rt.work_slice])
 
     def _w_total_for(self, rt: _Cohort) -> float:
-        """Cohort ``rt``'s weight mass this round (surviving mass under
-        faults — the combine's renormalization denominator)."""
+        """Cohort ``rt``'s weight mass this round (surviving sampled mass
+        under faults — the combine's renormalization denominator)."""
         if self._rnd_weights is None:
             return rt.w_total
-        return float(self._rnd_weights[rt.slice].sum(dtype=np.float32))
+        return float(self._rnd_weights[rt.work_slice].sum(dtype=np.float32))
 
     def _present_for(self, rt: _Cohort):
-        """Cohort slice of the round's presence mask (None ⇒ no faults —
+        """Cohort block of the round's presence mask (None ⇒ no faults —
         the phase functions then take the mask-free trace)."""
         if self._rnd_present is None:
             return None
-        return jnp.asarray(self._rnd_present[rt.slice])
+        return jnp.asarray(self._rnd_present[rt.work_slice])
+
+    def _scale_for(self, rt: _Cohort):
+        """Cohort block of this round's Byzantine scale vector gathered
+        over the sampled set — None without a sampler (the phase closures
+        then use their baked population-order constant) or without a
+        scaled-update attack."""
+        if self._rnd_scale is None:
+            return None
+        return jnp.asarray(self._rnd_scale[rt.work_slice])
 
     # ------------------------------------------------------------------
     def _make_seccl_step(self):
@@ -786,7 +950,12 @@ class FederatedRunner:
 
         def round_fn(states, server_llm, server_slm, server_llm_opt,
                      server_slm_opt, last_globals, weights, pubs, privs,
-                     server_steps, present):
+                     server_steps, present, scales=None):
+            # per-round Byzantine scale: the population-order closure
+            # constant normally; under participant sampling the gathered
+            # (S,) vector arrives as data (every sampled round passes it,
+            # so the trace is warmed once)
+            sc = scale if scales is None else scales[0]
             gref = last_globals[0] if cfg.prox_weight > 0 else None
             p, o = self._device_chain(
                 ccl_step, amt_step, states[0][0], states[0][1], server_llm,
@@ -809,8 +978,8 @@ class FederatedRunner:
             # present-and-on-time set, so stale uploads get weight exactly 0
             uploads = lora.StackedClients(
                 lora.partition(p, lora.is_lora_leaf))
-            if scale is not None:
-                uploads = _scale_uploads(uploads, scale)
+            if sc is not None:
+                uploads = _scale_uploads(uploads, sc)
             agg = mma.aggregate_stacked(uploads, weights[0])
 
             if cfg.mode == "fedavg":
@@ -907,9 +1076,18 @@ class FederatedRunner:
         # Popped with cfg.staleness lag.
         self._srv_q: collections.deque = collections.deque()
         self.refresh_eval_shards()
-        # the prefetch worker must not keep a dropped runner alive: it
-        # holds only a weakref and exits on its own once the runner is
-        # collected (close() remains the deterministic path)
+        self._start_prefetch()
+        if self._schedule is not None:
+            # round 0's working set is already resident (the buffers were
+            # seeded from its draw); stage its gather anyway so the splice
+            # path is uniform from the first round
+            self._stage_gather_for(0)
+
+    def _start_prefetch(self) -> None:
+        """(Re)start the double-buffered round-assembly worker.  The
+        worker must not keep a dropped runner alive: it holds only a
+        weakref and exits on its own once the runner is collected
+        (close() remains the deterministic path)."""
         ref = weakref.ref(self)
 
         def assemble():
@@ -921,16 +1099,33 @@ class FederatedRunner:
 
     def _assemble_round(self):
         """One round's device-ready batch stacks (one pub/priv stack per
-        cohort; clients live on axis 1 of the (steps, n, B, ...) leaves).
-        The synchronous top of the stacked rounds — the overlap engine runs
-        it on the prefetch worker instead, and places the server stack on
-        its dedicated server device."""
+        cohort; clients live on axis 1 of the (steps, work_n, B, ...)
+        leaves), pulled from the per-GLOBAL-client stream bank for exactly
+        the clients the round touches — the sampled working set, or the
+        whole cohort without a sampler.  The synchronous top of the stacked
+        rounds — the overlap engine runs it on the prefetch worker instead
+        (its own round counter runs ahead of the applied rounds, and the
+        schedule's stateless replay lets the worker draw the same sampled
+        sets independently), and places the server stack on its dedicated
+        server device."""
         cfg = self.cfg
+        spec = self.spec
+        rnd = self._assemble_idx
+        self._assemble_idx += 1
+        locals_ = (self._schedule.round_locals(rnd)
+                   if self._schedule is not None else None)
         pubs, privs = [], []
         for rt in self._cohorts:
-            pub = stack_steps(rt.pub_stacked, cfg.local_steps_ccl) \
-                if _do_ccl(cfg) else None
-            priv = stack_steps(rt.priv_stacked, cfg.local_steps_amt)
+            if locals_ is None:
+                members = range(rt.offset, rt.offset + rt.n)
+            else:
+                members = [rt.offset + int(i) for i in locals_[rt.idx]]
+            pub = self._streams.gather_steps(
+                [f"pub/{j}" for j in members],
+                spec.cohort_steps_ccl(rt.idx)) if _do_ccl(cfg) else None
+            priv = self._streams.gather_steps(
+                [f"priv/{j}" for j in members],
+                spec.cohort_steps_amt(rt.idx))
             m = self._mesh_for(rt.idx)
             if m is not None:
                 def put(tree, _m=m):
@@ -941,7 +1136,7 @@ class FederatedRunner:
                 priv = put(priv)
             pubs.append(pub)
             privs.append(priv)
-        server = stack_steps(self._server_np_iter, cfg.server_steps) \
+        server = self._streams.stack_steps("server", cfg.server_steps) \
             if _do_seccl(cfg) else None
         if server is not None:
             srv_dev = getattr(self, "_server_device", None)
@@ -952,6 +1147,103 @@ class FederatedRunner:
                     server,
                     shard_part.replicated_shardings(server, self.mesh))
         return tuple(pubs), tuple(privs), server
+
+    # ------------------------------------------------------------------
+    # population layer: gather each round's sampled working set from the
+    # ClientStore into the fixed-size stacked buffers, scatter it back
+
+    def _gather_host(self, locals_):
+        """Host-side store gather of one round's sampled members — one
+        stacked ``{"train", "opt"}`` tree per cohort (cohorts gather
+        separately: their personal key sets differ under model
+        heterogeneity)."""
+        return [self._store.gather([rt.offset + int(i)
+                                    for i in locals_[rt.idx]])
+                for rt in self._cohorts]
+
+    def _install_working_set(self, host) -> None:
+        """Splice per-cohort host-gathered ``{"train", "opt"}`` stacks into
+        the resident buffers.  Only the personal (trainable + optimizer)
+        leaves move; the shared frozen backbone inside ``stacked_params``
+        never leaves the device — the persistent buffer is the transfer
+        budget's fixed cost."""
+        for rt, h in zip(self._cohorts, host):
+            m = self._mesh_for(rt.idx)
+            dev = getattr(self, "_client_device", None)
+            train = shard_part.place_stacked(h["train"], m, TRAIN_RULES,
+                                             axis=0, device=dev)
+            opt = shard_part.place_stacked(h["opt"], m, TRAIN_RULES,
+                                           axis=0, device=dev)
+            rt.stacked_params = lora.combine(rt.stacked_params, train)
+            rt.stacked_opt = opt
+
+    def _load_working_set(self) -> None:
+        """Gather this round's sampled members (drawn by
+        :meth:`_begin_round`) from the store into the stacked buffers.
+        The overlap engine stages round r+1's gather on a background
+        thread (:meth:`_stage_next_gather`); a staged result is used only
+        when it belongs to this round."""
+        if self._schedule is None or not self._stacked:
+            return
+        host = None
+        box = getattr(self, "_staged_gather", None)
+        if box is not None:
+            self._staged_gather = None
+            box["thread"].join()
+            if box["err"] is not None:
+                raise box["err"]
+            if box["rnd"] == self._rnd_no:
+                host = box["out"]
+        if host is None:
+            host = self._gather_host(self._rnd_locals)
+        self._install_working_set(host)
+
+    def _scatter_working_set(self) -> None:
+        """Write the trained working set back to the registered population
+        (the personal subset only: the trainable partition plus the
+        optimizer state — exactly what :meth:`__init__` registered)."""
+        if self._schedule is None or not self._stacked:
+            return
+        for rt in self._cohorts:
+            ids = [rt.offset + int(i) for i in self._rnd_locals[rt.idx]]
+            self._store.scatter(ids, {
+                "train": lora.partition(rt.stacked_params),
+                "opt": rt.stacked_opt})
+
+    def _stage_next_gather(self) -> None:
+        """Overlap engine: start the NEXT round's store gather on a daemon
+        thread, so disk reads / host stacking overlap the in-flight round
+        the same way the data prefetcher does.  The next
+        :meth:`_load_working_set` joins the thread and uses the staged
+        result when the round numbers line up (they always do in steady
+        state; a checkpoint restore discards the stage)."""
+        if self._schedule is None:
+            return
+        # _begin_round already advanced the counter to the next round
+        self._stage_gather_for(self._round_idx)
+
+    def _stage_gather_for(self, rnd: int) -> None:
+        """Start round ``rnd``'s store gather on a daemon thread."""
+        locals_ = self._schedule.round_locals(rnd)
+        box = {"out": None, "err": None, "rnd": rnd}
+
+        def work():
+            try:
+                box["out"] = self._gather_host(locals_)
+            except BaseException as e:  # noqa: BLE001 — re-raised at join
+                box["err"] = e
+
+        t = threading.Thread(target=work, name="store-gather", daemon=True)
+        box["thread"] = t
+        self._staged_gather = box
+        t.start()
+
+    def _discard_staged_gather(self) -> None:
+        """Drop a pending staged gather (restore / shutdown path)."""
+        box = getattr(self, "_staged_gather", None)
+        if box is not None:
+            self._staged_gather = None
+            box["thread"].join()
 
     def _own_avgs(self, partials) -> Tuple[Dict, ...]:
         """Each cohort's intra-cohort MMA average of its architecture-
@@ -1014,8 +1306,8 @@ class FederatedRunner:
             return agg, ({},)
         own_avgs = []
         for rt, p in zip(self._cohorts, payloads):
-            wsl = w[rt.slice]
-            csl = None if contrib is None else contrib[rt.slice]
+            wsl = w[rt.work_slice]
+            csl = None if contrib is None else contrib[rt.work_slice]
             mass = float(wsl.sum() if csl is None else (wsl * csl).sum())
             if not rt.own or not mass > 0.0:
                 own_avgs.append({})
@@ -1025,11 +1317,11 @@ class FederatedRunner:
                 present=csl, trim_frac=cfg.trim_frac)
             own_avgs.append(own)
         agg = mma.robust_combine_cohorts(
-            payloads, [w[rt.slice] for rt in self._cohorts],
+            payloads, [w[rt.work_slice] for rt in self._cohorts],
             [rt.shared for rt in self._cohorts],
             self._server_lora_dtypes, cfg.robust,
             present=(None if contrib is None else
-                     [contrib[rt.slice] for rt in self._cohorts]),
+                     [contrib[rt.work_slice] for rt in self._cohorts]),
             trim_frac=cfg.trim_frac)
         return agg, tuple(own_avgs)
 
@@ -1103,12 +1395,16 @@ class FederatedRunner:
 
         def make_device_phase(rt: _Cohort):
             ccl_step, amt_step = self._make_device_steps(rt)
-            scale = (jnp.asarray(self._attack_scale[rt.slice])
-                     if self._attack_scale is not None else None)
+            scale0 = (jnp.asarray(self._attack_scale[rt.slice])
+                      if self._attack_scale is not None else None)
 
             def device_phase(stacked_params, stacked_opt, anchor_llm,
                              last_global, weights, pub_steps, priv_steps,
-                             present):
+                             present, scale=None):
+                # population-order closure constant normally; the sampled
+                # (work_n,) gather arrives as a traced argument under a
+                # sampler (passed every round, so one warm trace)
+                sc = scale0 if scale is None else scale
                 gref = last_global if cfg.prox_weight > 0 else None
                 new_p, new_o = self._device_chain(
                     ccl_step, amt_step, stacked_params, stacked_opt,
@@ -1124,8 +1420,8 @@ class FederatedRunner:
                     return stacked_params, stacked_opt, ()
                 uploads = lora.StackedClients(
                     lora.partition(stacked_params, lora.is_lora_leaf))
-                if scale is not None:
-                    uploads = _scale_uploads(uploads, scale)
+                if sc is not None:
+                    uploads = _scale_uploads(uploads, sc)
                 if robust != "mean":
                     # robust reductions are order statistics over the
                     # client axis — they need the RAW uploads at the
@@ -1179,10 +1475,10 @@ class FederatedRunner:
         presence draw at apply time (under overlap staleness the delivery
         may have been produced rounds ago — what matters is who is
         reachable when it lands)."""
-        bcast = {k: jnp.broadcast_to(v, (rt.n,) + v.shape)
+        bcast = {k: jnp.broadcast_to(v, (rt.work_n,) + v.shape)
                  for k, v in delivery.items()}
         if self._rnd_present is not None:
-            pres = jnp.asarray(self._rnd_present[rt.slice])
+            pres = jnp.asarray(self._rnd_present[rt.work_slice])
             cur = lora.partition(stacked_params,
                                  lambda s, _b=bcast: s in _b)
             bcast = _where_clients(pres, bcast, cur)
@@ -1218,6 +1514,7 @@ class FederatedRunner:
         """
         cfg = self.cfg
         self._begin_round()
+        self._load_working_set()
         pubs, privs, server = next(self._prefetch)
         payloads, post_amts = [], []
         for c, rt in enumerate(self._cohorts):
@@ -1226,12 +1523,14 @@ class FederatedRunner:
             post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
                 rt.stacked_params, rt.stacked_opt, anchor_llm,
                 rt.last_global, self._weights_for(rt), pubs[c], privs[c],
-                self._present_for(rt))
+                self._present_for(rt), self._scale_for(rt))
             rt.stacked_params = post_amt
             post_amts.append(post_amt)
             payloads.append(payload)
 
         if cfg.mode == "standalone":
+            self._scatter_working_set()
+            self._stage_next_gather()
             if not evaluate:
                 return {}
             return self._finalize_eval(
@@ -1267,6 +1566,12 @@ class FederatedRunner:
                     if key not in puts:
                         puts[key] = self._to_client_placement(rt, anchor_tr)
                     rt.anchor_tr = puts[key]
+
+        # the sampled members' final state (post-AMT + any landed
+        # delivery) returns to the population; round r+1's gather starts
+        # in the background while this round's eval / next dispatch runs
+        self._scatter_working_set()
+        self._stage_next_gather()
 
         if not evaluate:
             return {}
@@ -1306,18 +1611,22 @@ class FederatedRunner:
             return self._run_round_split(evaluate)
         cfg = self.cfg
         self._begin_round()
+        self._load_working_set()
         pubs, privs, server = self._assemble_round()
         states = tuple((rt.stacked_params, rt.stacked_opt)
                        for rt in self._cohorts)
         lgs = tuple(rt.last_global for rt in self._cohorts)
         ws = tuple(self._weights_for(rt) for rt in self._cohorts)
         pres = tuple(self._present_for(rt) for rt in self._cohorts)
+        scs = (tuple(self._scale_for(rt) for rt in self._cohorts)
+               if self._rnd_scale is not None else None)
         (post_amt, states, self.server_llm, self.server_slm,
          self.server_llm_opt, self.server_slm_opt, lgs) = self._round_fn(
             states, self.server_llm, self.server_slm, self.server_llm_opt,
-            self.server_slm_opt, lgs, ws, pubs, privs, server, pres)
+            self.server_slm_opt, lgs, ws, pubs, privs, server, pres, scs)
         for rt, (p, o), lg in zip(self._cohorts, states, lgs):
             rt.stacked_params, rt.stacked_opt, rt.last_global = p, o, lg
+        self._scatter_working_set()
 
         if not evaluate:
             return {}
@@ -1332,13 +1641,14 @@ class FederatedRunner:
         anchors always come from the live server LLM."""
         cfg = self.cfg
         self._begin_round()
+        self._load_working_set()
         pubs, privs, server = self._assemble_round()
         payloads, post_amts = [], []
         for c, rt in enumerate(self._cohorts):
             post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
                 rt.stacked_params, rt.stacked_opt, self.server_llm,
                 rt.last_global, self._weights_for(rt), pubs[c], privs[c],
-                self._present_for(rt))
+                self._present_for(rt), self._scale_for(rt))
             rt.stacked_params = post_amt
             post_amts.append(post_amt)
             payloads.append(payload)
@@ -1353,6 +1663,7 @@ class FederatedRunner:
                     self.server_llm, self.server_slm, self.server_llm_opt,
                     self.server_slm_opt, self._stable_agg(agg), server)
                 self._apply_deliveries(down, own_avgs)
+        self._scatter_working_set()
 
         if not evaluate:
             return {}
@@ -1360,44 +1671,74 @@ class FederatedRunner:
             self._evaluate_clients(post_amt=post_amts))
 
     # ------------------------------------------------------------------
+    def _pull_jnp(self, name: str) -> Dict:
+        """One host batch from the stream bank as device arrays (the loop
+        engine's per-step granularity)."""
+        return {k: jnp.asarray(v)
+                for k, v in self._streams.pull(name).items()}
+
+    def _loop_client_state(self, rt: _Cohort, i: int):
+        """Client ``rt.offset + i``'s full params + opt under the loop
+        engine: the resident per-client lists normally, or materialized
+        from the store (shared frozen base + the client's personal leaves)
+        under a sampler."""
+        if self._schedule is None:
+            return rt.device_params[i], rt.device_opt[i]
+        st = self._store.get(rt.offset + i)
+        p = lora.combine(self._cohort_bases[rt.idx],
+                         {k: jnp.asarray(v) for k, v in st["train"].items()})
+        return p, jax.tree.map(jnp.asarray, st["opt"])
+
     def _run_round_loop(self, evaluate: bool = True) -> Dict:
         cfg = self.cfg
+        spec = self.spec
         self._begin_round()
-        pres = self._rnd_present
-        scale = self._attack_scale
-        # (2) device side: CCL then AMT, cohort by cohort
+        pres = self._rnd_present     # working-set order under a sampler
+        scale = self._attack_scale   # population order always
+        sampled = self._schedule is not None
+        # (2) device side: CCL then AMT, cohort by cohort.  Only the
+        # round's members train; under a sampler each member's state is
+        # materialized from the store and written back post-AMT (so
+        # mid-round eval reads the post-AMT model, like the other engines)
         uploads: List[List[Dict]] = []
         for rt in self._cohorts:
+            k_ccl = spec.cohort_steps_ccl(rt.idx)
+            k_amt = spec.cohort_steps_amt(rt.idx)
+            members = ([int(i) for i in self._rnd_locals[rt.idx]]
+                       if sampled else list(range(rt.n)))
             ups = []
-            for i in range(rt.n):
+            for pos, i in enumerate(members):
                 j = rt.offset + i
-                if pres is not None and not pres[j]:
+                row = rt.work_slice.start + pos if sampled else j
+                p, o = self._loop_client_state(rt, i)
+                if pres is not None and not pres[row]:
                     # offline: the round does not happen for this device —
                     # but its shuffle streams must still advance, or the
                     # stacked engines' replay of the per-GLOBAL-client
                     # streams would desynchronize from this reference
                     if _do_ccl(cfg):
-                        for _ in range(cfg.local_steps_ccl):
-                            next(rt.pub_iters[i])
-                    for _ in range(cfg.local_steps_amt):
-                        next(rt.priv_iters[i])
-                    ups.append(lora.partition(rt.device_params[i],
-                                              lora.is_lora_leaf))
+                        self._streams.advance(f"pub/{j}", k_ccl)
+                    self._streams.advance(f"priv/{j}", k_amt)
+                    ups.append(lora.partition(p, lora.is_lora_leaf))
                     continue
-                p, o = rt.device_params[i], rt.device_opt[i]
                 if _do_ccl(cfg):
-                    for _ in range(cfg.local_steps_ccl):
-                        pub = next(rt.pub_iters[i])
+                    for _ in range(k_ccl):
+                        pub = self._pull_jnp(f"pub/{j}")
                         anchor = self._anchor_fn(self.server_llm, dict(
                             pub,
                             modality_mask=jnp.ones_like(pub["modality_mask"]),
                             modality_feats=pub["modality_feats"]))
                         p, o, _ = rt.dev_ccl_step(p, o, pub, anchor)
                 gref = rt.last_global if cfg.prox_weight > 0 else None
-                for _ in range(cfg.local_steps_amt):
-                    p, o, _ = rt.dev_amt_step(p, o, next(rt.priv_iters[i]),
+                for _ in range(k_amt):
+                    p, o, _ = rt.dev_amt_step(p, o,
+                                              self._pull_jnp(f"priv/{j}"),
                                               None, gref)
-                rt.device_params[i], rt.device_opt[i] = p, o
+                if sampled:
+                    self._store.put(j, {"train": lora.partition(p),
+                                        "opt": o})
+                else:
+                    rt.device_params[i], rt.device_opt[i] = p, o
                 ups.append(lora.partition(p, lora.is_lora_leaf))
             if scale is not None:
                 # Byzantine scaled-update: ALL marked clients report
@@ -1406,7 +1747,7 @@ class FederatedRunner:
                 # vector unconditionally)
                 ups = [attacks.scaled_update(u, float(scale[rt.offset + i]))
                        if scale[rt.offset + i] != 1.0 else u
-                       for i, u in enumerate(ups)]
+                       for i, u in zip(members, ups)]
             uploads.append(ups)
 
         client_eval = self._evaluate_clients() if evaluate else None
@@ -1444,10 +1785,7 @@ class FederatedRunner:
             for c, rt in enumerate(self._cohorts):
                 delivery = self._cohort_delivery(rt, agg, own_avgs[c])
                 rt.last_global = delivery
-                for i in range(rt.n):
-                    if pres is None or pres[rt.offset + i]:
-                        rt.device_params[i] = lora.combine(
-                            rt.device_params[i], delivery)
+                self._loop_deliver(rt, delivery, pres)
             return self._finalize_eval(client_eval) if evaluate else {}
 
         self.server_slm = lora.combine(self.server_slm, agg)
@@ -1458,7 +1796,7 @@ class FederatedRunner:
         # this point)
         if _do_seccl(cfg):
             for _ in range(cfg.server_steps):
-                batch = next(self.pub_iter_server)
+                batch = self._pull_jnp("server")
                 (self.server_llm, self.server_slm, self.server_llm_opt,
                  self.server_slm_opt, _) = self._se_step(
                     self.server_llm, self.server_slm,
@@ -1471,11 +1809,32 @@ class FederatedRunner:
         for c, rt in enumerate(self._cohorts):
             delivery = self._cohort_delivery(rt, down, own_avgs[c])
             rt.last_global = delivery
+            self._loop_deliver(rt, delivery, pres)
+        return self._finalize_eval(client_eval) if evaluate else {}
+
+    def _loop_deliver(self, rt: _Cohort, delivery: Dict, pres) -> None:
+        """Alg. 1 step 5 for the loop engine: splice the delivery into
+        each reachable member's params — the resident per-client trees, or
+        the stored personal leaves under a sampler (a delivery key outside
+        a client's personal set — none today — would be dropped rather
+        than grow its stored tree)."""
+        if self._schedule is None:
             for i in range(rt.n):
                 if pres is None or pres[rt.offset + i]:
-                    rt.device_params[i] = lora.combine(rt.device_params[i],
-                                                       delivery)
-        return self._finalize_eval(client_eval) if evaluate else {}
+                    rt.device_params[i] = lora.combine(
+                        rt.device_params[i], delivery)
+            return
+        for pos, i in enumerate(self._rnd_locals[rt.idx]):
+            row = rt.work_slice.start + pos
+            if pres is not None and not pres[row]:
+                continue
+            j = rt.offset + int(i)
+            st = self._store.get(j)
+            tr = dict(st["train"])
+            for k, v in delivery.items():
+                if k in tr:
+                    tr[k] = np.asarray(v)
+            self._store.put(j, {"train": tr, "opt": st["opt"]})
 
     # ------------------------------------------------------------------
     def jit_cache_sizes(self) -> Dict[str, int]:
@@ -1507,14 +1866,24 @@ class FederatedRunner:
         measure enqueue).  Under the overlap engine the critical path is
         the device side only — the server chain is deliberately pipelined
         off it; use :meth:`drain` to block on everything."""
-        state = tuple((rt.stacked_params, rt.stacked_opt)
-                      if self._stacked else tuple(rt.device_params)
+        state = tuple(self._resident_client_state(rt)
                       for rt in self._cohorts)
         if self.engine == "overlap":
             jax.block_until_ready(state)
             return self
         jax.block_until_ready((state, self.server_llm, self.server_slm))
         return self
+
+    def _resident_client_state(self, rt: _Cohort):
+        """The cohort's device-resident client state (the sync barrier's
+        operand): the stacked buffers, the per-client lists, or nothing —
+        the loop engine under a sampler keeps client state host-side in
+        the store."""
+        if self._stacked:
+            return (rt.stacked_params, rt.stacked_opt)
+        if self._schedule is not None:
+            return ()
+        return tuple(rt.device_params)
 
     # ------------------------------------------------------------------
     def drain(self) -> "FederatedRunner":
@@ -1523,8 +1892,7 @@ class FederatedRunner:
         outputs not yet applied to the clients.  The overlap engine's
         full-state barrier (a superset of :meth:`sync`); cheap and
         equivalent to :meth:`sync` for the other engines."""
-        state = tuple((rt.stacked_params if self._stacked
-                       else tuple(rt.device_params), rt.last_global)
+        state = tuple((self._resident_client_state(rt), rt.last_global)
                       for rt in self._cohorts)
         pending = list(getattr(self, "_srv_q", ()))
         jax.block_until_ready((state, self.server_llm, self.server_slm,
@@ -1537,6 +1905,7 @@ class FederatedRunner:
         eval-shard rebuild (no-op for the other engines).  Safe to call
         more than once."""
         self._join_eval_refresh()
+        self._discard_staged_gather()
         pf = getattr(self, "_prefetch", None)
         if pf is not None:
             self._prefetch = None
@@ -1550,29 +1919,246 @@ class FederatedRunner:
         return self.history
 
     # ------------------------------------------------------------------
+    # checkpoint / resume — the whole run state as ONE pytree through
+    # CheckpointManager.  Restore resets the round counter and replays
+    # the stream bank by per-round pull counts (no rng state crosses the
+    # boundary), so rounds r+1..r+k after a restore re-draw the same
+    # sampled sets / fault masks and consume the same data as the
+    # uninterrupted run — bit-identically.
+
+    def checkpoint_state(self) -> Dict:
+        """The run state pytree: the round counter, server models +
+        optimizers, per-cohort deliveries, and every client's personal
+        state (the store under a sampler; the stacked trainable/opt
+        buffers or per-client lists otherwise).  Refuses mid-pipeline
+        overlap state — a non-empty staleness queue is not a round
+        boundary (drain by finishing the round first; ``staleness=0``
+        empties it every round)."""
+        if len(getattr(self, "_srv_q", ())) > 0:
+            raise RuntimeError(
+                "cannot checkpoint with pending pipelined server outputs "
+                "(overlap staleness queue is non-empty)")
+        if self._schedule is not None:
+            clients = self._store.state_pytree()
+        elif self._stacked:
+            clients = tuple(
+                (lora.partition(rt.stacked_params), rt.stacked_opt)
+                for rt in self._cohorts)
+        else:
+            clients = tuple(
+                (tuple(lora.partition(p) for p in rt.device_params),
+                 tuple(rt.device_opt))
+                for rt in self._cohorts)
+        return {
+            "round": np.int64(self._round_idx),
+            "server_llm": self.server_llm,
+            "server_slm": self.server_slm,
+            "server_llm_opt": self.server_llm_opt,
+            "server_slm_opt": self.server_slm_opt,
+            "last_global": tuple(rt.last_global for rt in self._cohorts),
+            "clients": clients,
+        }
+
+    def save_checkpoint(self, mgr, step: Optional[int] = None) -> int:
+        """Write the run state at the current round boundary; returns the
+        step used (defaults to the completed-round count)."""
+        step = self._round_idx if step is None else int(step)
+        mgr.save(step, self.checkpoint_state())
+        return step
+
+    def load_checkpoint(self, mgr, step: Optional[int] = None
+                        ) -> "FederatedRunner":
+        """Restore a run state saved by :meth:`save_checkpoint` into this
+        (identically-constructed) runner and fast-forward the data streams
+        to the restored round."""
+        state = mgr.restore(self.checkpoint_state(), step)
+        self._restore_state(state)
+        return self
+
+    def _restore_state(self, state: Dict) -> None:
+        # the overlap engine's background workers consume the stream bank
+        # and the store — stop them before touching either
+        was_overlap = self.engine == "overlap"
+        if was_overlap:
+            self._join_eval_refresh()
+            self._discard_staged_gather()
+            pf = getattr(self, "_prefetch", None)
+            if pf is not None:
+                self._prefetch = None
+                pf.close()
+            self._srv_q.clear()
+        rnd = int(np.asarray(state["round"]))
+        self._round_idx = rnd
+        self._assemble_idx = rnd
+        self._rnd_present = self._rnd_contrib = self._rnd_weights = None
+        self._rnd_locals = self._rnd_ids = self._rnd_no = None
+        self._rnd_scale = None
+
+        # server state back to its engine placement
+        if was_overlap:
+            def put(t):
+                return jax.device_put(t, self._server_device)
+        elif self._stacked and self.mesh is not None:
+            def put(t):
+                return jax.device_put(
+                    t, shard_part.replicated_shardings(t, self.mesh))
+        else:
+            def put(t):
+                return t
+        self.server_llm = put(state["server_llm"])
+        self.server_slm = put(state["server_slm"])
+        self.server_llm_opt = put(state["server_llm_opt"])
+        self.server_slm_opt = put(state["server_slm_opt"])
+        for rt, lg in zip(self._cohorts, state["last_global"]):
+            rt.last_global = self._to_client_placement(rt, lg)
+        if was_overlap:
+            # staleness queue empty at a checkpoint boundary ⇒ the live
+            # anchor trainables equal the server LLM's current trainables
+            anchor = lora.partition(self.server_llm)
+            puts = {}
+            for rt in self._cohorts:
+                key = self._placement_key(rt)
+                if key not in puts:
+                    puts[key] = self._to_client_placement(rt, anchor)
+                rt.anchor_tr = puts[key]
+
+        # client state
+        if self._schedule is not None:
+            self._store.load_state_pytree(state["clients"])
+            if self._stacked:
+                # reload the working set the next round will draw
+                self._install_working_set(self._gather_host(
+                    self._schedule.round_locals(rnd)))
+        elif self._stacked:
+            for rt, (train, opt) in zip(self._cohorts, state["clients"]):
+                m = self._mesh_for(rt.idx)
+                dev = getattr(self, "_client_device", None)
+                train = shard_part.place_stacked(
+                    train, m, TRAIN_RULES, axis=0, device=dev)
+                rt.stacked_params = lora.combine(rt.stacked_params, train)
+                rt.stacked_opt = shard_part.place_stacked(
+                    opt, m, TRAIN_RULES, axis=0, device=dev)
+        else:
+            for rt, (trains, opts) in zip(self._cohorts, state["clients"]):
+                for i, (tr, o) in enumerate(zip(trains, opts)):
+                    rt.device_params[i] = lora.combine(
+                        rt.device_params[i], tr)
+                    rt.device_opt[i] = o
+
+        # data streams: re-create at position 0 and replay the completed
+        # rounds' pull counts
+        self._streams.reset()
+        self._replay_streams(rnd)
+        if was_overlap:
+            self._start_prefetch()
+            if self._schedule is not None:
+                self._stage_gather_for(rnd)
+
+    def _replay_streams(self, rounds: int) -> None:
+        """Fast-forward the stream bank past ``rounds`` completed rounds.
+        Every engine consumes identical per-round pull counts (absent
+        clients under faults advance their streams too; only sampled
+        members pull at all), so the replay is engine-independent."""
+        cfg = self.cfg
+        spec = self.spec
+        pulls: Dict[str, int] = {}
+        for r in range(rounds):
+            locals_ = (self._schedule.round_locals(r)
+                       if self._schedule is not None else None)
+            for rt in self._cohorts:
+                members = (range(rt.n) if locals_ is None
+                           else [int(i) for i in locals_[rt.idx]])
+                k_ccl = spec.cohort_steps_ccl(rt.idx)
+                k_amt = spec.cohort_steps_amt(rt.idx)
+                for i in members:
+                    j = rt.offset + i
+                    if _do_ccl(cfg):
+                        pulls[f"pub/{j}"] = pulls.get(f"pub/{j}", 0) + k_ccl
+                    pulls[f"priv/{j}"] = pulls.get(f"priv/{j}", 0) + k_amt
+            if _do_seccl(cfg):
+                pulls["server"] = pulls.get("server", 0) + cfg.server_steps
+        for name, k in pulls.items():
+            self._streams.advance(name, k)
+
+    # ------------------------------------------------------------------
     # evaluation — one metric definition (seccl.make_eval_step) under all
     # engines; see the module docstring for the engine contract
 
+    def _active_locals(self) -> List[np.ndarray]:
+        """The per-cohort sampled local indices the CURRENT client state
+        belongs to: this round's draw once :meth:`_begin_round` ran, or
+        the upcoming round's prospective draw between runs (the stacked
+        buffers were seeded / scattered from exactly that state)."""
+        if self._rnd_locals is not None:
+            return self._rnd_locals
+        return self._schedule.round_locals(self._round_idx)
+
+    def _active_ids(self) -> np.ndarray:
+        """The sampled GLOBAL client ids of :meth:`_active_locals`."""
+        return np.concatenate([
+            off + loc for off, loc in zip(self.spec.offsets,
+                                          self._active_locals())])
+
+    def _sampled_eval_steps(self, rt: _Cohort, members):
+        """Padded device-stacked eval shards for one cohort's sampled
+        members, cached by member tuple (FIFO-capped — repeated draws of
+        small populations reuse their shards).  The block count is forced
+        to the cohort's fixed ``eval_blocks``, so eval shapes never depend
+        on the draw and the jitted eval scan keeps one trace."""
+        key = tuple(int(i) for i in members)
+        steps = rt.eval_cache.get(key)
+        if steps is not None:
+            return steps
+        js = [rt.offset + i for i in key]
+        steps = stack_eval_steps(stacked_eval_batches(
+            [self.priv_test[j] for j in js],
+            self.spec.cohort_batch_size(rt.idx),
+            self.masks[np.asarray(js)], n_blocks=rt.eval_blocks))
+        m = self._mesh_for(rt.idx)
+        if m is not None:
+            steps = jax.device_put(steps, shard_part.stacked_eval_shardings(
+                steps, m, TRAIN_RULES))
+        if len(rt.eval_cache) >= 8:
+            rt.eval_cache.pop(next(iter(rt.eval_cache)))
+        rt.eval_cache[key] = steps
+        return steps
+
     def _evaluate_clients(self, post_amt=None) -> List[Dict]:
-        """Per-device test metrics in global client order, on the current
-        (or the given per-cohort post-AMT stacked) device models.
+        """Per-device test metrics on the current (or the given per-cohort
+        post-AMT stacked) device models — the full population in global
+        client order, or the round's sampled participants (still in global
+        id order: draws are sorted) under a sampler.
         Stacked: one jitted scan-over-vmap per cohort over its padded eval
         shards; loop: reference host loop, one device at a time."""
         self._join_eval_refresh()
+        sampled = self._schedule is not None
         if self._stacked:
             out = []
             for c, rt in enumerate(self._cohorts):
                 sp = post_amt[c] if post_amt is not None \
                     else rt.stacked_params
-                sums = rt.client_eval_fn(sp, rt.eval_steps)
+                steps = (self._sampled_eval_steps(
+                             rt, self._active_locals()[rt.idx])
+                         if sampled else rt.eval_steps)
+                sums = rt.client_eval_fn(sp, steps)
                 host = {k: np.asarray(v) for k, v in sums.items()}
                 out.extend(
                     seccl.metrics_from_sums({k: host[k][i] for k in host})
-                    for i in range(rt.n))
+                    for i in range(rt.work_n))
             return out
+        if sampled:
+            return [self._eval_model(
+                        rt.eval_step,
+                        self._loop_client_state(rt, int(i))[0],
+                        self.priv_test[rt.offset + int(i)],
+                        self.masks[rt.offset + int(i)],
+                        self.spec.cohort_batch_size(rt.idx))
+                    for rt in self._cohorts
+                    for i in self._active_locals()[rt.idx]]
         return [self._eval_model(rt.eval_step, rt.device_params[i],
                                  self.priv_test[rt.offset + i],
-                                 self.masks[rt.offset + i])
+                                 self.masks[rt.offset + i],
+                                 self.spec.cohort_batch_size(rt.idx))
                 for rt in self._cohorts for i in range(rt.n)]
 
     def _eval_server(self) -> Dict:
@@ -1633,15 +2219,23 @@ class FederatedRunner:
 
     def _build_eval_shards(self) -> None:
         bs = self.cfg.batch_size
-        for rt in self._cohorts:
-            sl = rt.slice
-            rt.eval_steps = stack_eval_steps(
-                stacked_eval_batches(self.priv_test[sl], bs, self.masks[sl]))
-            m = self._mesh_for(rt.idx)
-            if m is not None:
-                rt.eval_steps = jax.device_put(
-                    rt.eval_steps, shard_part.stacked_eval_shardings(
-                        rt.eval_steps, m, TRAIN_RULES))
+        if self._schedule is None:
+            for rt in self._cohorts:
+                sl = rt.slice
+                rt.eval_steps = stack_eval_steps(stacked_eval_batches(
+                    self.priv_test[sl],
+                    self.spec.cohort_batch_size(rt.idx), self.masks[sl]))
+                m = self._mesh_for(rt.idx)
+                if m is not None:
+                    rt.eval_steps = jax.device_put(
+                        rt.eval_steps, shard_part.stacked_eval_shardings(
+                            rt.eval_steps, m, TRAIN_RULES))
+        else:
+            # sampled working sets build their shards lazily per draw
+            # (:meth:`_sampled_eval_steps`); a refresh invalidates the
+            # cache so mutated test data is picked up
+            for rt in self._cohorts:
+                rt.eval_cache.clear()
         self._server_eval_steps = stack_eval_steps(
             np_eval_batches(self.public_test, bs))
         if self.engine == "overlap":
@@ -1671,6 +2265,10 @@ class FederatedRunner:
         out = {"client": (client_eval if client_eval is not None
                           else self._evaluate_clients()),
                "server": self._eval_server()}
+        if self._schedule is not None:
+            # which registered clients the per-client metrics belong to
+            # (sampled rounds measure the round's working set only)
+            out["participants"] = [int(j) for j in self._active_ids()]
         cs = out["client"]
         out["summary"] = {
             "avg_acc": float(np.mean([c["acc"] for c in cs])),
@@ -1690,14 +2288,16 @@ class FederatedRunner:
         (:meth:`_finalize_eval`)."""
         return self._finalize_eval()
 
-    def _eval_model(self, step, params, data, mask) -> Dict:
+    def _eval_model(self, step, params, data, mask,
+                    batch_size: Optional[int] = None) -> Dict:
         """Reference evaluation of one model: host loop over padded
         ``eval_batches``, accumulating the jitted per-batch masked sums
         (``seccl.make_eval_step``) in f32 — the same sequential addition
         order as the stacked engines' scan, so the engines agree to float
         rounding."""
         sums = {k: np.float32(0.0) for k in seccl.EVAL_SUM_KEYS}
-        for batch in eval_batches(data, self.cfg.batch_size, mask):
+        for batch in eval_batches(data, batch_size or self.cfg.batch_size,
+                                  mask):
             out = jax.device_get(step(params, batch))
             for k in sums:
                 sums[k] = np.float32(sums[k] + out[k])

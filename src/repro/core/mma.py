@@ -61,6 +61,25 @@ def aggregation_weights(n_modalities: Sequence[int],
     return m / jnp.maximum(jnp.sum(m), 1.0)
 
 
+def sampled_weights(n_modalities: Sequence[int], sampled: Sequence[int],
+                    present=None) -> jnp.ndarray:
+    """Eq. 13 weights renormalized over a sampled participant subset.
+
+    ``sampled`` holds the global client ids in this round's working set
+    (:class:`repro.core.store.ParticipantSchedule` order); the returned
+    (S,) weights are ``m_j / Σ_{i∈sampled} m_i`` — Eq. 13 with the mass
+    restricted to the participants, the paper-faithful rule for partial
+    participation.  ``present`` (optional (S,) mask over the *sampled*
+    positions) composes PR 7's survivor renormalization on top: absent
+    survivors drop out of the same single normalization, so sampling and
+    faults share one mass rule.  With the full population sampled in id
+    order this is bit-for-bit :func:`aggregation_weights` (the gather is
+    the identity, and the mask multiply / sum sequence is unchanged).
+    """
+    m = np.asarray(n_modalities)[np.asarray(sampled, np.int64)]
+    return aggregation_weights(m, present)
+
+
 def renormalize(weights, present) -> jnp.ndarray:
     """Mass-renormalize arbitrary weights over a survivor mask:
     ``w*present / Σ(w*present)`` (safe when the surviving mass is 0 —

@@ -148,6 +148,65 @@ class FaultSpec:
                 "'scaled_update'); use byzantine=0 for honest clients")
 
 
+@dataclasses.dataclass(frozen=True)
+class ParticipantSampler:
+    """Per-round participant sampling over the registered population.
+
+    Real cross-device federation registers far more clients than any round
+    touches; each round the server samples a working set and streams its
+    state in/out of the device-stacked buffers (:mod:`repro.core.store`).
+    ``per_cohort`` is the per-round sample size — one int shared by every
+    cohort, or a tuple with one entry per cohort.  Draws replay statelessly
+    from ``(seed, round)`` exactly like :class:`FaultSpec`'s schedule: the
+    sampler has no mutable state, so checkpoint/resume and the overlap
+    prefetch thread re-derive any round's set independently.
+
+    MMA Eq. 13 weights renormalize over the sampled set (the mass
+    ``m_j / Σ_{sampled} m_i`` — same rule as PR 7's survivor
+    renormalization, which composes on top when faults are active).
+    A sampler whose counts equal the cohort sizes is the *identity*
+    configuration and must reproduce the unsampled engines bit-exactly.
+
+    A scalar ``per_cohort`` clamps to each cohort's size (so one number
+    works across heterogeneous cohort sizes); a tuple is strict — one
+    entry per cohort, each in ``[1, n_clients]``.
+    """
+
+    per_cohort: object = 1            # int | Tuple[int, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        pc = self.per_cohort
+        if isinstance(pc, (tuple, list)):
+            pc = tuple(int(k) for k in pc)
+        else:
+            pc = int(pc)
+        if isinstance(pc, int):
+            if pc < 1:
+                raise ValueError(f"per_cohort must be >= 1; got {pc}")
+        elif any(k < 1 for k in pc):
+            raise ValueError(f"per_cohort entries must be >= 1; got {pc}")
+        object.__setattr__(self, "per_cohort", pc)
+
+    def counts(self, cohort_sizes) -> Tuple[int, ...]:
+        """Per-cohort sample counts, validated against cohort sizes."""
+        sizes = tuple(int(n) for n in cohort_sizes)
+        pc = self.per_cohort
+        if isinstance(pc, int):
+            ks = tuple(min(pc, n) for n in sizes)
+        else:
+            if len(pc) != len(sizes):
+                raise ValueError(
+                    f"per_cohort has {len(pc)} entries for "
+                    f"{len(sizes)} cohorts")
+            ks = pc
+        for k, n in zip(ks, sizes):
+            if not (1 <= k <= n):
+                raise ValueError(
+                    f"sample count {k} out of range for cohort of {n}")
+        return ks
+
+
 def _cdim(cfg: ModelConfig) -> int:
     """The connector's shared latent width (one rule, owned by
     :func:`repro.core.connector.latent_dim`)."""
@@ -166,6 +225,12 @@ class ClientCohort:
     overrides the federation-level MER for this cohort.
     ``data_fraction`` keeps only that fraction of each member's private
     shard (a per-cohort data slice; 1.0 = the full legacy shard).
+    ``batch_size`` / ``local_steps_ccl`` / ``local_steps_amt`` (optional)
+    override the federation-level protocol values for this cohort — edge
+    tiers with less memory train smaller batches or fewer local steps.
+    Intra-cohort homogeneity still holds, so the cohort's one compiled
+    device chain simply gets different static loop bounds / batch shapes
+    (cohorts already compile separately; overrides add no retraces).
     """
 
     model: ModelConfig
@@ -174,10 +239,17 @@ class ClientCohort:
     modalities: Optional[Tuple[int, ...]] = None
     rho: Optional[float] = None
     data_fraction: float = 1.0
+    batch_size: Optional[int] = None
+    local_steps_ccl: Optional[int] = None
+    local_steps_amt: Optional[int] = None
 
     def __post_init__(self):
         if self.n_clients < 1:
             raise ValueError("n_clients must be >= 1")
+        for name in ("batch_size", "local_steps_ccl", "local_steps_amt"):
+            v = getattr(self, name)
+            if v is not None and int(v) < 1:
+                raise ValueError(f"cohort {name} must be >= 1; got {v}")
         if not (0.0 < self.data_fraction <= 1.0):
             raise ValueError("data_fraction must be in (0, 1]")
         if self.rho is not None and not (0.0 <= self.rho <= 1.0):
@@ -234,6 +306,7 @@ class FederationSpec:
                                      # trimmed_mean | norm_clip
     trim_frac: float = 0.2           # fraction trimmed from EACH end
     faults: Optional[FaultSpec] = None
+    sampler: Optional[ParticipantSampler] = None
 
     def __post_init__(self):
         cohorts = tuple(self.cohorts)
@@ -244,6 +317,9 @@ class FederationSpec:
                           self.staleness, self.robust, self.trim_frac)
         if not (0.0 <= self.rho <= 1.0):
             raise ValueError("rho must be in [0, 1]")
+        if self.sampler is not None:
+            # resolve+validate per-cohort sample counts now, not mid-run
+            self.sampler.counts([c.n_clients for c in cohorts])
         # anchored CCL and cross-cohort aggregation need ONE connector
         # latent space: every cohort SLM, the server SLM and the server LLM
         # must agree on the modality interface (the paper's "unified latent
@@ -294,6 +370,21 @@ class FederationSpec:
     def cohort_rho(self, c: int) -> float:
         return self.cohorts[c].rho if self.cohorts[c].rho is not None \
             else self.rho
+
+    def cohort_batch_size(self, c: int) -> int:
+        """Cohort ``c``'s training batch size (override or spec default)."""
+        v = self.cohorts[c].batch_size
+        return int(v) if v is not None else self.batch_size
+
+    def cohort_steps_ccl(self, c: int) -> int:
+        """Cohort ``c``'s CCL local-step count (override or default)."""
+        v = self.cohorts[c].local_steps_ccl
+        return int(v) if v is not None else self.local_steps_ccl
+
+    def cohort_steps_amt(self, c: int) -> int:
+        """Cohort ``c``'s AMT local-step count (override or default)."""
+        v = self.cohorts[c].local_steps_amt
+        return int(v) if v is not None else self.local_steps_amt
 
     def mask_seed(self, c: int) -> int:
         """Seed of cohort ``c``'s MER draw (cohort 0 = the spec seed, so
@@ -354,4 +445,4 @@ _PROTOCOL_FIELDS = (
     "rounds", "local_steps_ccl", "local_steps_amt", "server_steps",
     "batch_size", "lr", "rho", "n_negatives", "seed", "engine", "staleness",
     "use_mma", "use_seccl", "use_ccl", "mode", "kt_weight", "prox_weight",
-    "ccl_score", "robust", "trim_frac", "faults")
+    "ccl_score", "robust", "trim_frac", "faults", "sampler")

@@ -1,0 +1,194 @@
+"""ClientStore + ParticipantSchedule — the registered-population layer.
+
+Real cross-device federation (the paper's deployment regime) registers a
+population far larger than any single round: per round the server samples a
+working set of participants, streams their state in, trains, and streams
+the updates back out.  Before this module every engine materialized ALL N
+clients' stacked params/opt on device for the whole run, capping N at one
+host's device memory.  The refactor splits client state into two layers:
+
+* **registered population** (:class:`ClientStore`) — per-client personal
+  state (the trainable LoRA + connector subset and its optimizer moments)
+  held host-side as numpy, or spilled to disk in the
+  :mod:`repro.checkpointing` pytree format (one ``save_pytree`` npz per
+  client).  The frozen backbone is NOT per-client: every cohort member
+  shares its cohort's frozen base (they deploy the same pretrained
+  architecture), so the store scales with the 0.65 %-volume personal
+  state, not with model size × N.
+* **per-round working set** — the fixed-size device-stacked buffers the
+  PR 1-7 scan-over-vmap machinery consumes.  Each round the runner
+  *gathers* the sampled clients' rows from the store into the stacked
+  buffer (host ``np.stack`` → one transfer), runs the unchanged jitted
+  round functions, and *scatters* the post-round trainable/opt rows back.
+  Membership enters jit as DATA (which rows were gathered), never as a
+  shape — resampling adds zero recompilations after warm-up.
+
+:class:`ParticipantSchedule` is the runtime sampler: stateless replay from
+``(seed, round)`` exactly like :class:`repro.core.faults.FaultSchedule`
+(host-side ``np.random.default_rng([seed, salt, round])``, independent of
+the jax init/data seed streams), with per-cohort sample counts from
+:class:`repro.core.spec.ParticipantSampler`.  Sampled local indices are
+SORTED, so a full-population sample is the identity permutation and the
+working set lists clients in global order (the engines' metric/aggregation
+order).  Checkpoint/resume needs no sampler state: round ``r``'s draw is a
+pure function of ``(seed, r)``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpointing.checkpoint import load_pytree, save_pytree
+from repro.core.spec import ParticipantSampler
+
+# salt of the per-round sampling draw's rng stream (cf. faults._draws)
+_SAMPLE_SALT = 0x5A3B1E
+
+
+class ParticipantSchedule:
+    """Deterministic per-round participant draws over the cohort structure.
+
+    ``round_locals(r)`` → per-cohort sorted LOCAL member indices;
+    ``round_ids(r)`` → the same as one concatenated GLOBAL id vector (the
+    working set's row → global client map).  Any round can be drawn in any
+    order, any number of times — replay is stateless, so the overlap
+    engine's prefetch worker and the main thread draw the same sets
+    independently, and a restored run replays the original sampling
+    trajectory from the round counter alone.
+    """
+
+    def __init__(self, sampler: ParticipantSampler,
+                 cohort_sizes: Sequence[int], offsets: Sequence[int]):
+        self.sampler = sampler
+        self.sizes = tuple(int(n) for n in cohort_sizes)
+        self.offsets = tuple(int(o) for o in offsets)
+        self.counts = sampler.counts(self.sizes)
+
+    @property
+    def total(self) -> int:
+        """Working-set size: total sampled clients per round."""
+        return sum(self.counts)
+
+    @property
+    def is_identity(self) -> bool:
+        """True when every cohort samples its full membership — the
+        configuration that must reproduce the unsampled engines
+        bit-exactly."""
+        return self.counts == self.sizes
+
+    def round_locals(self, rnd: int) -> List[np.ndarray]:
+        """Per-cohort sorted local indices sampled for round ``rnd``."""
+        rng = np.random.default_rng(
+            [int(self.sampler.seed), _SAMPLE_SALT, int(rnd)])
+        return [np.sort(rng.permutation(n)[:k])
+                for n, k in zip(self.sizes, self.counts)]
+
+    def round_ids(self, rnd: int) -> np.ndarray:
+        """Round ``rnd``'s sampled GLOBAL client ids (working-set order)."""
+        return np.concatenate([
+            off + loc for off, loc in zip(self.offsets,
+                                          self.round_locals(rnd))])
+
+
+def _to_host(tree):
+    """Device → host: every leaf as numpy (bf16 survives via ml_dtypes).
+
+    jax.Array leaves are COPIED, not viewed: on the CPU backend
+    ``np.asarray`` aliases the device buffer, so a view-holding store would
+    pin every registered client's init-time device array — and each
+    round's stale stacked working-set buffers — for the life of the run,
+    silently scaling "device" memory with N.  Copying the 0.65 %-volume
+    personal state is what a real accelerator's device→host transfer does
+    anyway."""
+    return jax.tree.map(
+        lambda a: np.array(a) if isinstance(a, jax.Array) else np.asarray(a),
+        tree)
+
+
+class ClientStore:
+    """Host/disk-resident registry of per-client personal state.
+
+    Each entry is a pytree ``{"train": <flat trainable dict>, "opt": <opt
+    state>}`` — the client's LoRA/connector leaves plus optimizer moments,
+    i.e. everything that distinguishes it from its cohort's shared frozen
+    base.  In-memory by default; pass ``directory`` to spill each client to
+    its own ``client_<id>`` npz in the checkpointing pytree format (the
+    store then holds only tiny structure templates, and ``gather`` reads
+    the sampled rows back from disk).
+
+    ``gather``/``scatter`` move whole working sets: ``gather(ids)`` stacks
+    the sampled clients' leaves on a new leading axis (host ``np.stack`` —
+    the caller transfers once), ``scatter(ids, stacked)`` pulls the
+    device-stacked result to host once per leaf and writes the rows back.
+    """
+
+    def __init__(self, directory: Optional[str] = None):
+        self._dir = directory
+        self._mem: Dict[int, Dict] = {}
+        self._tmpl: Dict[int, Dict] = {}
+        if directory is not None:
+            os.makedirs(directory, exist_ok=True)
+
+    # -- single-client access -----------------------------------------
+    def _path(self, cid: int) -> str:
+        return os.path.join(self._dir, f"client_{int(cid)}")
+
+    def put(self, cid: int, state: Dict) -> None:
+        """Write client ``cid``'s personal state (host numpy copy)."""
+        cid = int(cid)
+        host = _to_host(state)
+        if self._dir is None:
+            self._mem[cid] = host
+            return
+        save_pytree(self._path(cid), host)
+        if cid not in self._tmpl:
+            self._tmpl[cid] = jax.tree.map(
+                lambda a: np.empty(0, a.dtype), host)
+
+    def get(self, cid: int) -> Dict:
+        """Client ``cid``'s personal state (host leaves)."""
+        cid = int(cid)
+        if self._dir is None:
+            return self._mem[cid]
+        return _to_host(load_pytree(self._path(cid), self._tmpl[cid]))
+
+    # -- working-set movement -----------------------------------------
+    def gather(self, ids: Sequence[int]) -> Dict:
+        """Stack the sampled clients' states on a new leading axis."""
+        rows = [self.get(cid) for cid in ids]
+        return jax.tree.map(lambda *xs: np.stack(xs), *rows)
+
+    def scatter(self, ids: Sequence[int], stacked) -> None:
+        """Write a post-round stacked working set back, row by row."""
+        host = _to_host(stacked)
+        for i, cid in enumerate(ids):
+            self.put(cid, jax.tree.map(lambda a, _i=i: a[_i], host))
+
+    # -- introspection / checkpointing --------------------------------
+    def __len__(self) -> int:
+        return len(self._mem) if self._dir is None else len(self._tmpl)
+
+    def ids(self) -> List[int]:
+        src = self._mem if self._dir is None else self._tmpl
+        return sorted(src)
+
+    def nbytes(self) -> int:
+        """Total host bytes of the registered population (reads every
+        client under disk spill — use for reporting, not hot paths)."""
+        total = 0
+        for cid in self.ids():
+            total += sum(a.nbytes for a in jax.tree.leaves(self.get(cid)))
+        return total
+
+    def state_pytree(self) -> Dict:
+        """The whole population as one pytree (string client keys), for a
+        :class:`repro.checkpointing.CheckpointManager` round-trip."""
+        return {f"c{cid}": self.get(cid) for cid in self.ids()}
+
+    def load_state_pytree(self, tree: Dict) -> None:
+        """Inverse of :meth:`state_pytree`."""
+        for key, state in tree.items():
+            self.put(int(key[1:]), state)

@@ -44,6 +44,14 @@ _FIELDS = ("tokens", "loss_mask", "modality_feats", "label", "template_start")
 
 def _index_stream(n: int, batch_size: int, seed: int) -> Iterator[np.ndarray]:
     """Infinite per-epoch-shuffled index batches (drop-last)."""
+    if n < batch_size:
+        # drop-last on an undersized shard yields ZERO batches per epoch —
+        # the consumer would spin forever.  Large registered populations
+        # make this easy to hit (tiny private shards); fail loudly instead.
+        raise ValueError(
+            f"shard of {n} rows cannot fill a single batch of "
+            f"{batch_size} (drop-last) — lower batch_size or grow the "
+            "shard")
     rng = np.random.default_rng(seed)
     while True:
         perm = rng.permutation(n)
@@ -186,19 +194,23 @@ def eval_batches(data: Dict[str, np.ndarray], batch_size: int,
 
 def stacked_eval_batches(datas: Sequence[Dict[str, np.ndarray]],
                          batch_size: int,
-                         masks: Optional[np.ndarray] = None
+                         masks: Optional[np.ndarray] = None,
+                         n_blocks: Optional[int] = None
                          ) -> Iterator[Dict[str, np.ndarray]]:
     """Device-stacked eval shards: finite, numpy leaves of ``(N, B, ...)``.
 
     The eval mirror of :func:`stacked_batches`.  Devices may have
     differently-sized eval sets; every device is padded to the *largest*
-    device's block count, and ``row_valid`` ``(N, B)`` zeroes both tail
-    padding and whole past-the-end blocks, so device j's masked metric sums
-    equal ``eval_batches(datas[j], batch_size, masks[j])`` exactly.
+    device's block count (or a forced ``n_blocks``, e.g. to keep eval
+    shapes static across per-round participant subsets), and ``row_valid``
+    ``(N, B)`` zeroes both tail padding and whole past-the-end blocks, so
+    device j's masked metric sums equal
+    ``eval_batches(datas[j], batch_size, masks[j])`` exactly.
     """
     n_dev = len(datas)
     sizes = [d["tokens"].shape[0] for d in datas]
-    n_blocks = max(-(-n // batch_size) for n in sizes)
+    if n_blocks is None:
+        n_blocks = max(-(-n // batch_size) for n in sizes)
     iters = [np_eval_batches(datas[j], batch_size,
                              None if masks is None else masks[j],
                              n_blocks=n_blocks)
@@ -216,6 +228,91 @@ def stack_eval_steps(it: Iterator[Dict[str, np.ndarray]]
     steps = list(it)
     assert steps, "empty eval iterator"
     return _stack_on_device(steps)
+
+
+# ---------------------------------------------------------------------------
+# per-client stream bank (the population layer's data side)
+
+
+class ClientStreams:
+    """A bank of named infinite shuffle streams keyed by global client id.
+
+    Under per-round participant sampling (:mod:`repro.core.store`) a client
+    may sit out many rounds and later resume — and when it does, it must
+    continue *its own* shuffle stream, not restart or inherit a neighbour's
+    position.  The bank owns one :func:`_index_stream` per registered name
+    (``"pub/<gid>"``, ``"priv/<gid>"``, ``"server"``), created lazily from
+    the client's global seed, and pulls from it only when that client is
+    actually sampled.  Because each stream's position is just "how many
+    batches were pulled", a checkpointed run restores data state by
+    replaying the per-round pull counts with :meth:`advance` — no rng
+    objects cross the checkpoint boundary.
+
+    Pull order is the engines' contract: :meth:`gather_steps` pulls
+    device-major within each step (client 0 step t, client 1 step t, ...)
+    exactly like :func:`stacked_batches` + :func:`stack_steps`, so a bank
+    over the full population replays the pre-bank iterators bit-for-bit.
+    """
+
+    def __init__(self):
+        self._cfg: Dict[str, tuple] = {}
+        self._streams: Dict[str, Iterator[np.ndarray]] = {}
+        self._pulled: Dict[str, int] = {}
+
+    def register(self, name: str, data: Dict[str, np.ndarray],
+                 batch_size: int, seed: int,
+                 mask: Optional[np.ndarray] = None) -> None:
+        """Declare stream ``name`` (idempotent for identical configs)."""
+        self._cfg[name] = (data, int(batch_size), int(seed), mask)
+
+    def _stream(self, name: str) -> Iterator[np.ndarray]:
+        if name not in self._streams:
+            data, bs, seed, _ = self._cfg[name]
+            self._streams[name] = _index_stream(
+                data["tokens"].shape[0], bs, seed)
+            self._pulled.setdefault(name, 0)
+        return self._streams[name]
+
+    def pull(self, name: str) -> Dict[str, np.ndarray]:
+        """Next host batch of stream ``name`` (advances its position)."""
+        data, _, _, mask = self._cfg[name]
+        idx = next(self._stream(name))
+        self._pulled[name] += 1
+        return _gather_np(data, idx, mask)
+
+    def advance(self, name: str, k: int) -> None:
+        """Fast-forward ``k`` batches without assembling them — the
+        checkpoint-restore replay path (index draw only, no gathers)."""
+        s = self._stream(name)
+        for _ in range(k):
+            next(s)
+        self._pulled[name] += k
+
+    def pulled(self, name: str) -> int:
+        """Batches consumed from ``name`` so far (0 if never pulled)."""
+        return self._pulled.get(name, 0)
+
+    def reset(self) -> None:
+        """Drop all stream positions (streams re-create lazily at 0)."""
+        self._streams.clear()
+        self._pulled.clear()
+
+    def stack_steps(self, name: str, k: int) -> Dict[str, jnp.ndarray]:
+        """``k`` batches of one stream stacked ``(k, B, ...)`` on device —
+        the bank twin of ``stack_steps(np_batches(...), k)``."""
+        return _stack_on_device([self.pull(name) for _ in range(k)])
+
+    def gather_steps(self, names: Sequence[str], k: int
+                     ) -> Dict[str, jnp.ndarray]:
+        """``k`` steps × ``len(names)`` clients stacked ``(k, N, B, ...)``
+        on device, pulled device-major per step — the bank twin of
+        ``stack_steps(stacked_batches(...), k)`` over the named subset."""
+        steps = []
+        for _ in range(k):
+            per_dev = [self.pull(name) for name in names]
+            steps.append({key: np.stack([b[key] for b in per_dev])
+                          for key in per_dev[0]})
+        return _stack_on_device(steps)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,60 @@
+# Host-environment setup for JAX training launches, in the style of the
+# HomebrewNLP-Jax / olmax run.sh launchers.  Source this (or exec through
+# it) BEFORE python starts: two of the knobs below only work pre-process
+# (LD_PRELOAD) or pre-jax-init (XLA_FLAGS).
+#
+#   source src/repro/launch/env.sh [n_host_devices]
+#   src/repro/launch/env.sh python -m benchmarks.run        # exec form
+#
+# What each knob does and when it matters:
+#
+# * LD_PRELOAD=libtcmalloc — swap glibc malloc for tcmalloc.  The federated
+#   population layer (repro.core.store) does large, frequent host-side
+#   numpy allocations (gather/scatter of per-client LoRA stacks every
+#   round); tcmalloc's thread-cached allocator avoids the glibc arena
+#   contention between the main thread and the overlap engine's prefetch /
+#   store-gather workers.  Only takes effect at process start — cannot be
+#   set from python.  Skipped silently when the library is not installed.
+#
+# * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD — silence tcmalloc's "large
+#   alloc" warnings for big numpy buffers (population-scale client stores
+#   legitimately allocate hundreds of MB at once).
+#
+# * TF_CPP_MIN_LOG_LEVEL=4 — mute the XLA/TF C++ logging that otherwise
+#   interleaves with benchmark CSV output.
+#
+# * XLA_FLAGS=--xla_force_host_platform_device_count=N — make the CPU
+#   backend expose N devices so the mesh-sharded engine paths (stacked
+#   client axis, overlap server device) run on a real multi-device mesh
+#   on any host.  Must be set before the first jax call; from inside
+#   python use repro.launch.mesh.setup_host_env / force_host_device_count
+#   instead.  Defaults to leaving XLA_FLAGS alone (single device).
+
+_tcm=""
+for _c in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+          /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+          /usr/lib/libtcmalloc.so.4; do
+  if [ -e "$_c" ]; then _tcm="$_c"; break; fi
+done
+if [ -n "$_tcm" ]; then
+  export LD_PRELOAD="$_tcm"
+  export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+unset _tcm _c
+
+export TF_CPP_MIN_LOG_LEVEL=4
+
+# Optional first argument: forced host device count (consumed only in the
+# `source env.sh N` form; the exec form passes everything through).
+case "${1:-}" in
+  ''|*[!0-9]*) : ;;  # no / non-numeric first arg: leave XLA_FLAGS alone
+  *)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=$1 ${XLA_FLAGS:-}"
+    shift 2>/dev/null || true
+    ;;
+esac
+
+# Exec form: `env.sh python ...` runs the command under the environment.
+if [ "$#" -gt 0 ] && [ "${0##*/}" = "env.sh" ]; then
+  exec "$@"
+fi

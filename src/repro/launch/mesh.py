@@ -12,6 +12,46 @@ import jax
 
 _FORCE_FLAG = "--xla_force_host_platform_device_count"
 
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def setup_host_env(n_devices: int = 0) -> dict:
+    """Python-side mirror of ``launch/env.sh`` (the HomebrewNLP run.sh
+    idioms) for everything that CAN still be set after process start.
+
+    - ``TF_CPP_MIN_LOG_LEVEL=4``: mutes XLA/TF C++ log spam (matters for
+      benchmark CSV output and CI logs; honored at backend init).
+    - ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD``: set only when tcmalloc is
+      already preloaded — silences "large alloc" reports for the
+      population store's big host buffers.  The LD_PRELOAD itself only
+      works at process start; use ``env.sh`` for that.
+    - ``n_devices > 0``: forwards to :func:`force_host_device_count`
+      (must run before the first jax call).
+
+    Returns the dict of variables it set, for logging.
+    """
+    changed = {}
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    changed["TF_CPP_MIN_LOG_LEVEL"] = os.environ["TF_CPP_MIN_LOG_LEVEL"]
+    preload = os.environ.get("LD_PRELOAD", "")
+    if "tcmalloc" in preload:
+        os.environ.setdefault(
+            "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD", "60000000000")
+        changed["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = (
+            os.environ["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"])
+    elif any(os.path.exists(c) for c in _TCMALLOC_CANDIDATES):
+        # can't LD_PRELOAD from a running process — point at the launcher
+        changed["hint"] = ("tcmalloc available but not preloaded; launch "
+                           "via src/repro/launch/env.sh to use it")
+    if n_devices > 0:
+        force_host_device_count(n_devices)
+        changed["XLA_FLAGS"] = os.environ["XLA_FLAGS"]
+    return changed
+
 
 def force_host_device_count(n: int) -> None:
     """Make the CPU backend expose ``n`` devices (XLA's forced host

@@ -154,6 +154,27 @@ def stacked_eval_shardings(tree, mesh: Mesh, rules: Rules):
     return stacked_client_shardings(tree, mesh, rules, axis=1)
 
 
+def place_stacked(tree, mesh: Optional[Mesh], rules: Optional[Rules],
+                  axis: int = 0, device=None):
+    """Transfer a host-stacked client tree to its compute placement.
+
+    The population layer's gather path (:mod:`repro.core.store`) assembles
+    working sets host-side (numpy ``stack``) and needs ONE placement rule
+    for the resulting ``(S, ...)`` trees: on a mesh, the client axis goes
+    to the "device" logical axis exactly like the resident stacks
+    (:func:`stacked_client_shardings`); off-mesh, leaves go to ``device``
+    (or the default device when None).  Centralizing this here keeps the
+    engines' gather/scatter code placement-agnostic.
+    """
+    import jax.numpy as jnp
+    if mesh is not None and rules is not None:
+        sh = stacked_client_shardings(tree, mesh, rules, axis=axis)
+        return jax.tree.map(jax.device_put, tree, sh)
+    if device is not None:
+        return jax.tree.map(lambda a: jax.device_put(a, device), tree)
+    return jax.tree.map(jnp.asarray, tree)
+
+
 def replicated_shardings(tree, mesh: Mesh):
     """Fully-replicated NamedShardings (server-side state on the client
     mesh)."""

@@ -141,6 +141,35 @@ def test_engines_match_standalone(corpus):
     _assert_summaries_match(s_vec, s_ov)
 
 
+def test_identity_sampler_is_bit_exact(corpus):
+    """PR 8 acceptance criterion: a full-population ParticipantSampler
+    (sample size == N, identity permutation) routes every round through the
+    ClientStore gather/scatter path yet reproduces the unsampled engines
+    BIT-exactly — summaries, working-set LoRA state, and the
+    store-materialized device_params view — on all three engines."""
+    from repro.core.spec import ParticipantSampler
+    for engine in ("loop", "vectorized", "overlap"):
+        base = _make_runner(corpus, engine)
+        sam = _make_runner(corpus, engine,
+                           sampler=ParticipantSampler(per_cohort=3, seed=0))
+        for _ in range(2):
+            s_base = base.run_round()["summary"]
+            s_sam = sam.run_round()["summary"]
+            _assert_summaries_match(s_base, s_sam, atol=0.0)
+        if engine != "loop":
+            base.drain(), sam.drain()
+            _assert_lora_state_match(base, sam, atol=0.0)
+        # the unstacked per-client view materializes from the store under a
+        # sampler; it must match the resident representation bit-for-bit
+        a = lora.partition(base.device_params[1], lora.is_lora_leaf)
+        b = lora.partition(sam.device_params[1], lora.is_lora_leaf)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]), err_msg=k)
+        base.close(), sam.close()
+
+
 # ---------------------------------------------------------------------------
 # cohort API (FederationSpec): legacy bit-for-bit shim + heterogeneous
 # federations (different d_model, disjoint modality subsets)
@@ -150,9 +179,10 @@ _HKW = dict(n_modalities=3, modality_dim=32, n_soft_tokens=4,
             vocab_size=128)
 
 
-def _het_spec(engine, n_a=2, n_b=2, **kw):
+def _het_spec(engine, n_a=2, n_b=2, cohort_a=None, cohort_b=None, **kw):
     """Two-cohort heterogeneous spec: different d_model/d_ff backbones and
-    DISJOINT modality subsets (cohort B additionally overrides rho)."""
+    DISJOINT modality subsets (cohort B additionally overrides rho).
+    ``cohort_a`` / ``cohort_b`` add per-cohort ClientCohort overrides."""
     slm_a = ModelConfig(name="coh-a", family="dense", n_layers=1, d_model=32,
                         n_heads=2, n_kv_heads=2, head_dim=8, d_ff=64, **_HKW)
     slm_b = ModelConfig(name="coh-b", family="dense", n_layers=1, d_model=48,
@@ -164,9 +194,9 @@ def _het_spec(engine, n_a=2, n_b=2, **kw):
     base.update(kw)
     return FederationSpec(
         cohorts=(ClientCohort(model=slm_a, n_clients=n_a, name="A",
-                              modalities=(0, 1)),
+                              modalities=(0, 1), **(cohort_a or {})),
                  ClientCohort(model=slm_b, n_clients=n_b, name="B",
-                              modalities=(2,), rho=0.9)),
+                              modalities=(2,), rho=0.9, **(cohort_b or {}))),
         server_llm=llm, engine=engine, **base)
 
 
@@ -229,6 +259,25 @@ def test_engines_agree_heterogeneous_cohorts(corpus):
     # the global client list spans both cohorts in global order
     ev = runners["vectorized"].evaluate()
     assert len(ev["client"]) == 4
+    runners["overlap"].close()
+
+
+def test_per_cohort_protocol_overrides_agree(corpus):
+    """Per-cohort batch_size / local-step overrides (the carried PR 5
+    ROADMAP item): cohort A trains smaller batches with an extra CCL step,
+    cohort B an extra AMT step — loop, vectorized and overlap engines must
+    agree, since overrides only change each cohort's static loop bounds and
+    batch shapes (cohorts compile separately already)."""
+    kw = dict(cohort_a=dict(batch_size=4, local_steps_ccl=2),
+              cohort_b=dict(local_steps_amt=2), rounds=1)
+    runners = {e: FederatedRunner(_het_spec(e, **kw), corpus)
+               for e in ("loop", "vectorized", "overlap")}
+    spec = runners["loop"].spec
+    assert spec.cohort_batch_size(0) == 4 and spec.cohort_batch_size(1) == 8
+    assert spec.cohort_steps_ccl(0) == 2 and spec.cohort_steps_amt(1) == 2
+    summaries = {e: r.run_round()["summary"] for e, r in runners.items()}
+    _assert_summaries_match(summaries["loop"], summaries["vectorized"])
+    _assert_summaries_match(summaries["vectorized"], summaries["overlap"])
     runners["overlap"].close()
 
 

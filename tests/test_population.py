@@ -1,0 +1,234 @@
+"""Registered-population layer (PR 8): ParticipantSchedule determinism and
+identity semantics, ClientStore roundtrips (in-memory and disk-spilled),
+subsampled three-engine parity with the zero-recompilation contract,
+checkpoint/resume replay of the sampling trajectory on every engine,
+fault x sampling composition, and the launch host-env helpers."""
+import os
+import subprocess
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpointing.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core.federated import FederatedRunner
+from repro.core.spec import (ClientCohort, FaultSpec, FederationSpec,
+                             ParticipantSampler)
+from repro.core.store import ClientStore, ParticipantSchedule
+from repro.data.synthetic import synthetic_multimodal_corpus
+from repro.launch import mesh as launch_mesh
+
+_KW = dict(n_modalities=3, modality_dim=32, n_soft_tokens=4, connector_dim=48,
+           lora_rank=4, remat=False, activation="gelu", vocab_size=128)
+
+
+def _slm():
+    return ModelConfig(name="pop-slm", family="dense", n_layers=1, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=8, d_ff=64, **_KW)
+
+
+def _llm():
+    return ModelConfig(name="pop-llm", family="dense", n_layers=1, d_model=64,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=96, **_KW)
+
+
+def _spec(engine, n=4, **kw):
+    base = dict(rounds=4, local_steps_ccl=1, local_steps_amt=1,
+                server_steps=1, batch_size=4, lr=1e-2, rho=0.7, seed=0)
+    base.update(kw)
+    return FederationSpec(cohorts=(ClientCohort(model=_slm(), n_clients=n),),
+                          server_llm=_llm(), engine=engine, **base)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic_multimodal_corpus(0, 256, 20, 128, n_classes=4,
+                                       n_modalities=3, modality_dim=32,
+                                       template_len=4)
+
+
+def _match(a, b, atol):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=0, atol=atol,
+                                   err_msg=f"summary key {k!r}")
+
+
+# ---------------------------------------------------------------------------
+# ParticipantSchedule: stateless (seed, round) replay, sorted draws,
+# identity configuration, count validation
+
+def test_schedule_replay_sorted_and_identity():
+    sched = ParticipantSchedule(ParticipantSampler(per_cohort=2, seed=3),
+                                [5, 4], [0, 5])
+    assert sched.counts == (2, 2) and sched.total == 4
+    assert not sched.is_identity
+    a, b = sched.round_locals(7), sched.round_locals(7)
+    for x, y, n in zip(a, b, (5, 4)):
+        np.testing.assert_array_equal(x, y)     # stateless replay
+        assert len(x) == 2 and x[0] < x[1]      # sorted, distinct
+        assert 0 <= x[0] and x[-1] < n
+    np.testing.assert_array_equal(sched.round_ids(7),
+                                  np.concatenate([a[0], 5 + a[1]]))
+    # draws actually vary round to round
+    assert any(not np.array_equal(sched.round_ids(r), sched.round_ids(r + 1))
+               for r in range(6))
+    # a scalar per_cohort clamps to each cohort's size -> identity, and the
+    # identity draw is the sorted full membership every round
+    ident = ParticipantSchedule(ParticipantSampler(per_cohort=99, seed=0),
+                                [5, 4], [0, 5])
+    assert ident.counts == (5, 4) and ident.is_identity
+    for r in range(3):
+        np.testing.assert_array_equal(ident.round_ids(r), np.arange(9))
+
+
+def test_schedule_count_validation():
+    with pytest.raises(ValueError):
+        ParticipantSampler(per_cohort=0)
+    with pytest.raises(ValueError):
+        ParticipantSampler(per_cohort=(1, 0))
+    with pytest.raises(ValueError, match="entries"):
+        ParticipantSampler(per_cohort=(2,)).counts([5, 4])
+    with pytest.raises(ValueError, match="out of range"):
+        ParticipantSampler(per_cohort=(2, 6)).counts([5, 4])
+
+
+# ---------------------------------------------------------------------------
+# ClientStore: put/get/gather/scatter roundtrips, in-memory and npz-spilled
+
+def _client_state(cid):
+    return {"train": {"wq_lora_a": np.full((2, 3), cid, np.float32),
+                      "wq_lora_b": np.full((4,), cid / 2,
+                                           jax.numpy.bfloat16)},
+            "opt": (np.int32(cid), {"m": np.full((2, 3), -cid, np.float32)})}
+
+
+@pytest.mark.parametrize("spill", [False, True])
+def test_client_store_roundtrip(tmp_path, spill):
+    store = ClientStore(str(tmp_path / "spill") if spill else None)
+    for cid in range(3):
+        store.put(cid, _client_state(cid))
+    assert len(store) == 3 and store.ids() == [0, 1, 2]
+    got = store.get(1)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(_client_state(1))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    g = store.gather([2, 0])
+    assert g["train"]["wq_lora_a"].shape == (2, 2, 3)
+    assert g["train"]["wq_lora_a"][0, 0, 0] == 2    # row order follows ids
+    assert g["train"]["wq_lora_a"][1, 0, 0] == 0
+    assert g["train"]["wq_lora_b"].dtype == jax.numpy.bfloat16
+    # scatter the gathered rows back under swapped ids -> contents swap
+    store.scatter([0, 2], g)
+    assert store.get(0)["train"]["wq_lora_a"][0, 0] == 2
+    assert store.get(2)["train"]["wq_lora_a"][0, 0] == 0
+    assert store.nbytes() > 0
+    if spill:
+        files = os.listdir(tmp_path / "spill")
+        assert {"client_0.npz", "client_1.npz", "client_2.npz"} <= set(files)
+    # whole-population pytree roundtrip (the checkpoint representation)
+    fresh = ClientStore(None)
+    fresh.load_state_pytree(store.state_pytree())
+    assert fresh.ids() == store.ids()
+    for cid in store.ids():
+        for a, b in zip(jax.tree.leaves(fresh.get(cid)),
+                        jax.tree.leaves(store.get(cid))):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# subsampled engines: three-way parity, varying draws, zero recompilations
+
+def test_subsample_parity_and_no_retrace(corpus):
+    sam = ParticipantSampler(per_cohort=2, seed=5)
+    runners = {e: FederatedRunner(_spec(e, n=4, sampler=sam), corpus)
+               for e in ("loop", "vectorized", "overlap")}
+    parts, sizes = [], None
+    for rnd in range(3):
+        outs = {e: r.run_round() for e, r in runners.items()}
+        for e in ("vectorized", "overlap"):
+            _match(outs["loop"]["summary"], outs[e]["summary"], atol=2e-5)
+        p = {e: o["participants"] for e, o in outs.items()}
+        assert p["loop"] == p["vectorized"] == p["overlap"]
+        assert len(p["loop"]) == 2
+        parts.append(tuple(p["loop"]))
+        if rnd == 1:      # warm-up complete: every trace exists by round 2
+            sizes = {e: dict(runners[e].jit_cache_sizes())
+                     for e in ("vectorized", "overlap")}
+    assert len(set(parts)) > 1          # resampling actually changed the set
+    for e in ("vectorized", "overlap"):  # ...without a single recompilation
+        assert dict(runners[e].jit_cache_sizes()) == sizes[e], e
+    runners["overlap"].close()
+
+
+def test_faults_compose_with_sampling(corpus):
+    """Dropout masks gather into working-set order and the survivor
+    renormalization composes with the sampled-set renormalization: loop and
+    vectorized engines agree under faults x sampling."""
+    kw = dict(n=5, sampler=ParticipantSampler(per_cohort=3, seed=2),
+              faults=FaultSpec(dropout=0.4, seed=7))
+    loop = FederatedRunner(_spec("loop", **kw), corpus)
+    vec = FederatedRunner(_spec("vectorized", **kw), corpus)
+    for _ in range(2):
+        sl, sv = loop.run_round(), vec.run_round()
+        assert sl["participants"] == sv["participants"]
+        _match(sl["summary"], sv["summary"], atol=2e-5)
+
+
+def test_store_dir_spills_population_to_disk(corpus, tmp_path):
+    """store_dir= spills the registered population to per-client npz files
+    in the checkpointing format; the run only streams sampled rows."""
+    r = FederatedRunner(
+        _spec("vectorized", n=4, sampler=ParticipantSampler(per_cohort=2)),
+        corpus, store_dir=str(tmp_path / "pop"))
+    out = r.run_round()
+    assert all(np.isfinite(v) for v in out["summary"].values())
+    files = set(os.listdir(tmp_path / "pop"))
+    assert {f"client_{j}.npz" for j in range(4)} <= files
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume mid-run: the restored runner replays the same sampled
+# sets and bit-identical metrics for rounds r+1..r+k (satellite 4)
+
+@pytest.mark.parametrize("engine", ["vectorized", "overlap", "loop"])
+def test_checkpoint_resume_replays_sampled_rounds(corpus, tmp_path, engine):
+    sam = ParticipantSampler(per_cohort=2, seed=9)
+
+    def mk():
+        return FederatedRunner(_spec(engine, n=4, sampler=sam, seed=1),
+                               corpus)
+
+    a = mk()
+    for _ in range(2):
+        a.run_round()
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    assert a.save_checkpoint(mgr) == 2
+    cont = [a.run_round() for _ in range(2)]
+
+    b = mk()
+    b.load_checkpoint(mgr)
+    res = [b.run_round() for _ in range(2)]
+    for x, y in zip(cont, res):
+        assert x["participants"] == y["participants"]
+        _match(x["summary"], y["summary"], atol=0.0)   # bit-identical
+    if engine == "overlap":
+        a.close(), b.close()
+
+
+# ---------------------------------------------------------------------------
+# launch host-env helpers (satellite 2)
+
+def test_setup_host_env_and_env_sh():
+    changed = launch_mesh.setup_host_env()
+    assert os.environ["TF_CPP_MIN_LOG_LEVEL"] == \
+        changed["TF_CPP_MIN_LOG_LEVEL"]
+    # re-asserting the live backend's device count is a no-op (idempotent);
+    # a different count post-init raises (covered by force_host_device_count)
+    changed = launch_mesh.setup_host_env(jax.local_device_count())
+    assert "--xla_force_host_platform_device_count" in changed["XLA_FLAGS"]
+    sh = os.path.join(os.path.dirname(launch_mesh.__file__), "env.sh")
+    assert os.path.exists(sh)
+    assert subprocess.run(["sh", "-n", sh]).returncode == 0   # valid POSIX

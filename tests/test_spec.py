@@ -10,7 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig
 from repro.core.federated import FederatedConfig
-from repro.core.spec import ClientCohort, FederationSpec
+from repro.core.spec import (ClientCohort, FederationSpec,
+                             ParticipantSampler)
 from repro.data.multimodal import mer_partition, take_fraction
 
 settings.register_profile("spec", max_examples=25, deadline=None)
@@ -129,6 +130,40 @@ def test_from_legacy_roundtrip():
     spec = FederationSpec.from_legacy(cfg, _slm(), _llm())
     assert spec.n_cohorts == 1 and spec.n_devices == 4
     assert spec.to_config() == cfg          # exact protocol roundtrip
+
+
+# ---------------------------------------------------------------------------
+# participant sampling + per-cohort protocol overrides (PR 8)
+
+def test_participant_sampler_validated_at_spec_construction():
+    with pytest.raises(ValueError):
+        ParticipantSampler(per_cohort=0)
+    with pytest.raises(ValueError):
+        ParticipantSampler(per_cohort=(1, 0))
+    # tuple arity/range is checked against the cohorts in __post_init__,
+    # not first discovered mid-run
+    with pytest.raises(ValueError, match="entries"):
+        _spec(sampler=ParticipantSampler(per_cohort=(1, 1)))
+    with pytest.raises(ValueError, match="out of range"):
+        _spec(sampler=ParticipantSampler(per_cohort=(3,)))
+    sp = _spec(sampler=ParticipantSampler(per_cohort=1, seed=3))
+    assert sp.sampler.per_cohort == 1
+    assert sp.to_config().sampler is sp.sampler
+
+
+def test_per_cohort_protocol_override_validation_and_resolution():
+    for field in ("batch_size", "local_steps_ccl", "local_steps_amt"):
+        with pytest.raises(ValueError, match=field):
+            ClientCohort(model=_slm(), **{field: 0})
+    spec = _spec(cohorts=(
+        ClientCohort(model=_slm(), n_clients=2, batch_size=4,
+                     local_steps_amt=3),
+        ClientCohort(model=_slm(48), n_clients=1)))
+    assert spec.cohort_batch_size(0) == 4
+    assert spec.cohort_batch_size(1) == spec.batch_size
+    assert spec.cohort_steps_amt(0) == 3
+    assert spec.cohort_steps_ccl(0) == spec.local_steps_ccl
+    assert spec.cohort_steps_amt(1) == spec.local_steps_amt
 
 
 # ---------------------------------------------------------------------------
