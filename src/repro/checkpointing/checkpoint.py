@@ -1,6 +1,10 @@
 """Pytree checkpointing without external deps: one .npz per step plus a JSON
 treedef manifest.  Handles bf16 (stored as uint16 view), nested dicts/tuples,
-and federated round state (per-device params + optimizer moments).
+and federated round state (per-device params + optimizer moments — plus, under
+a stateful wire codec, the channel's error-feedback residuals: a dedicated
+``channel`` entry for the resident stacked engines, or the ``"chan"`` key
+inside each stored client entry under a participant sampler, so a resumed
+compressed-upload trajectory replays bit-identically).
 """
 from __future__ import annotations
 

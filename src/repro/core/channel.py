@@ -1,0 +1,346 @@
+"""The communication channel — ONE wire-format contract for every tree
+that crosses the edge-cloud boundary.
+
+The paper's headline efficiency claim (only ~0.65 % of parameter volume on
+the wire) was implicit before this module: every engine handed raw f32
+``StackedClients`` trees to MMA and the benchmark *computed* the fraction
+by arithmetic.  Following the structure-agnostic co-tuning argument
+(arxiv 2511.11678) that the compressed channel should be the only contract
+between heterogeneous edges and the cloud, all uplink (client → server
+LoRA uploads) and downlink (server → client redistribution) traffic now
+routes through :class:`Channel.encode` / :class:`Channel.decode`, and
+:meth:`Channel.bytes_on_wire` gives the *exact* byte count of any payload.
+
+Codecs (:class:`ChannelSpec.codec`):
+
+* ``"identity"`` — the default: uploads pass through untouched, zero cost,
+  and every engine is bit-exact with the pre-channel code (the refactor's
+  safety guarantee, asserted at atol=0.0 in the tests).
+* ``"int8"`` / ``"int4"`` — per-tile symmetric abs-max quantization: each
+  leaf is flattened per client, padded to a multiple of ``block``, and
+  every ``block``-wide tile is quantized against its own abs-max
+  (``q = round(x / scale)``, ``scale = max|tile| / qmax``) via the Pallas
+  kernel pair in :mod:`repro.kernels.quantize` (pure-jnp twin on CPU).
+  int4 codes are *held* in int8 arrays (XLA has no packed-nibble
+  arithmetic) but :meth:`bytes_on_wire` counts the packed wire size —
+  ``ceil(L/2)`` code bytes per client per leaf.  With
+  ``error_feedback=True`` (the default) each client keeps an f32 residual
+  ``e`` and transmits ``Q(u + e)``, carrying ``e' = (u + e) - deQ(Q(u+e))``
+  to the next round — the classic EF trick that turns biased rounding into
+  an unbiased-in-the-limit stream.  Residual state lives in the engines'
+  per-client state (and in :class:`repro.core.store.ClientStore` entries
+  under a participant sampler), so it replays through checkpoint/resume.
+* ``"sketch"`` — rank-``sketch_rank`` re-projection of each LoRA delta:
+  leaf ``X`` (per client, reshaped to trailing-2D ``(m, n)``) is projected
+  onto a round-fresh orthonormal basis ``Q`` (QR of a seeded Gaussian,
+  re-derived on both sides from ``(seed, leaf index, round)`` — the basis
+  itself never crosses the wire), transmitting ``X @ Q`` (``n → rank``) or
+  ``Qᵀ @ X`` (``m → rank``), whichever side exceeds the rank.  Leaves with
+  no dimension above the rank (e.g. the rank-r LoRA ``A`` factors) pass
+  raw.  CreamFL-style (arxiv 2302.08888): low-dimensional exchange is
+  enough to federate across architectures.
+
+Quantized encoding is *deterministic per tile* and tiles never cross the
+client axis, so encoding a stacked ``(N, ...)`` working set equals
+encoding each client alone — the property that keeps the loop /
+vectorized / overlap engines in agreement once the channel is on.
+
+The decode-before-reduce rule: order-statistic robust reductions
+(``robust="trimmed_mean" | "norm_clip"``) sort *per-client* values, so
+payloads MUST be decoded back to dense f32 before
+:func:`repro.core.mma.aggregate_stacked` runs — mirroring the PR 7
+secure-aggregation tension (order statistics need raw per-client uploads).
+The engines decode at the device/server phase boundary for exactly this
+reason; only the *wire* sees codes.
+
+Everything that varies per round (error-feedback residuals, the round
+index that freshens sketch bases, fault/sampling masks) enters jit as
+DATA, never as shapes: switching codecs builds a different runner, but
+within a runner no round — faulty, resampled, or otherwise — retraces
+after warm-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+CODECS = ("identity", "int8", "int4", "sketch")
+
+_QMAX = {"int8": 127, "int4": 7}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """Declarative wire-codec selection, validated at construction like
+    :class:`repro.core.spec.FaultSpec`.
+
+    * ``codec`` — one of ``identity | int8 | int4 | sketch``.
+    * ``block`` — quantization tile width: one f32 scale is transmitted
+      per ``block`` elements (per client, per leaf).  128 matches the
+      TPU lane width the Pallas kernel tiles over.
+    * ``error_feedback`` — keep per-client f32 residuals for the
+      quantized codecs (ignored by ``identity`` / ``sketch``).
+    * ``sketch_rank`` — rank of the sketch re-projection.
+    * ``seed`` — seed of the sketch basis stream (independent of the
+      data/init seeds, like the fault and sampler streams).
+    """
+
+    codec: str = "identity"
+    block: int = 128
+    error_feedback: bool = True
+    sketch_rank: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(
+                f"unknown codec {self.codec!r}; expected one of {CODECS}")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1; got {self.block}")
+        if self.sketch_rank < 1:
+            raise ValueError(
+                f"sketch_rank must be >= 1; got {self.sketch_rank}")
+
+    def make(self) -> "Channel":
+        """The runtime codec for this spec."""
+        return Channel(self)
+
+
+def _leaf_dims(shape) -> Tuple[int, int]:
+    """(N, L): leading client axis and flattened per-client length."""
+    n = int(shape[0])
+    ell = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    return n, ell
+
+
+class Channel:
+    """Runtime wire codec over flat ``{key: (N, ...)}`` upload dicts.
+
+    The leading axis is always the client axis (engines pass their
+    device-stacked working sets directly; the downlink multicast path
+    wraps its single tree via :meth:`roundtrip_tree`).  ``encode`` /
+    ``decode`` are jit-safe (shapes static, values traced) and also run
+    eagerly for the loop engine — elementwise codec math is eager/jit
+    bit-identical on CPU, which is what keeps the engines in agreement.
+    """
+
+    def __init__(self, spec: ChannelSpec):
+        self.spec = spec
+
+    # -- classification ------------------------------------------------
+    @property
+    def is_identity(self) -> bool:
+        """True for the pass-through codec (the bit-exact default)."""
+        return self.spec.codec == "identity"
+
+    @property
+    def stateful(self) -> bool:
+        """True when the codec carries per-client error-feedback
+        residuals between rounds (quantized codecs with EF on)."""
+        return self.spec.codec in _QMAX and self.spec.error_feedback
+
+    # -- state ---------------------------------------------------------
+    def init_state(self, like: Dict) -> Dict:
+        """Zero error-feedback residuals shaped like the stacked upload
+        templates (empty dict for stateless codecs)."""
+        if not self.stateful:
+            return {}
+        return {k: jnp.zeros(v.shape, jnp.float32) for k, v in like.items()}
+
+    # -- tiling helpers (quantized codecs) -----------------------------
+    def _tiles(self, ell: int) -> int:
+        return -(-ell // self.spec.block)
+
+    def _to_rows(self, u):
+        """(N, ...) f32 -> (N*T, block) tile rows, zero-padded per client."""
+        n, ell = _leaf_dims(u.shape)
+        t = self._tiles(ell)
+        rows = u.reshape(n, ell)
+        pad = t * self.spec.block - ell
+        if pad:
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((n, pad), rows.dtype)], axis=1)
+        return rows.reshape(n * t, self.spec.block)
+
+    def _from_rows(self, rows, shape):
+        """Inverse of :meth:`_to_rows` back to ``shape`` (still f32)."""
+        n, ell = _leaf_dims(shape)
+        t = self._tiles(ell)
+        return rows.reshape(n, t * self.spec.block)[:, :ell].reshape(shape)
+
+    # -- sketch helpers ------------------------------------------------
+    def _sketch_mode(self, shape) -> str:
+        """'right' (project the last dim), 'left' (the stacked middle
+        dims) or 'raw' (nothing exceeds the rank — e.g. biases and the
+        rank-r LoRA factors' short side)."""
+        if len(shape) < 3:
+            return "raw"
+        m = int(np.prod(shape[1:-1]))
+        n = int(shape[-1])
+        r = self.spec.sketch_rank
+        if n > r:
+            return "right"
+        if m > r:
+            return "left"
+        return "raw"
+
+    def _basis(self, dim: int, idx: int, rnd):
+        """Round-fresh orthonormal (dim, rank) basis, derived (never
+        transmitted) from ``(spec.seed, leaf index, round)``; ``rnd`` may
+        be traced — basis freshness is DATA, not shape."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.spec.seed), idx), rnd)
+        g = jax.random.normal(key, (dim, self.spec.sketch_rank), jnp.float32)
+        q, _ = jnp.linalg.qr(g)
+        return q
+
+    # -- encode / decode ----------------------------------------------
+    def encode(self, flat: Dict, state: Optional[Dict] = None, rnd=0
+               ) -> Tuple[Dict, Dict]:
+        """Encode a stacked upload dict → ``(payload, new_state)``.
+
+        ``state`` is the per-client error-feedback residual dict (pass
+        the engines' channel state; ``None`` or ``{}`` disables EF, the
+        downlink/multicast mode).  ``rnd`` is the round index (traced ok)
+        — it freshens the sketch bases and is ignored by other codecs.
+        """
+        codec = self.spec.codec
+        if codec == "identity":
+            return flat, (state if state is not None else {})
+        if codec in _QMAX:
+            return self._encode_quant(flat, state, _QMAX[codec])
+        return self._encode_sketch(flat, rnd), \
+            (state if state is not None else {})
+
+    def _encode_quant(self, flat, state, qmax):
+        ef = self.stateful and bool(state)
+        payload, new_state = {}, {}
+        for k in sorted(flat):
+            u = flat[k].astype(jnp.float32)
+            if ef:
+                u = u + state[k]
+            rows = self._to_rows(u)
+            q, s = ops.quantize(rows, qmax=qmax)
+            payload[k] = {"q": q, "s": s}
+            if ef:
+                dec = self._from_rows(ops.dequantize(q, s), u.shape)
+                new_state[k] = u - dec
+        return payload, (new_state if ef else
+                         (state if state is not None else {}))
+
+    def _encode_sketch(self, flat, rnd):
+        # the basis round index travels IN the payload (tiny int32 data,
+        # not shape), so decode stays a pure function of (payload, like)
+        rnd = jnp.asarray(rnd, jnp.int32)
+        payload = {}
+        for idx, k in enumerate(sorted(flat)):
+            x = flat[k]
+            mode = self._sketch_mode(x.shape)
+            if mode == "raw":
+                payload[k] = {"raw": x}
+                continue
+            n, m, d = (x.shape[0], int(np.prod(x.shape[1:-1])),
+                       int(x.shape[-1]))
+            xf = x.astype(jnp.float32).reshape(n, m, d)
+            if mode == "right":
+                q = self._basis(d, idx, rnd)
+                payload[k] = {"s": jnp.einsum("nmd,dr->nmr", xf, q),
+                              "rnd": rnd}
+            else:
+                q = self._basis(m, idx, rnd)
+                payload[k] = {"s": jnp.einsum("nmd,mr->nrd", xf, q),
+                              "rnd": rnd}
+        return payload
+
+    def decode(self, payload: Dict, like: Dict) -> Dict:
+        """Decode a payload back to dense leaves.  ``like`` maps each key
+        to an array or ``ShapeDtypeStruct`` with the ORIGINAL stacked
+        shape/dtype (the engines' upload templates)."""
+        codec = self.spec.codec
+        if codec == "identity":
+            return payload
+        out = {}
+        for idx, k in enumerate(sorted(payload)):
+            tmpl = like[k]
+            if codec in _QMAX:
+                rows = ops.dequantize(payload[k]["q"], payload[k]["s"])
+                out[k] = self._from_rows(rows, tmpl.shape).astype(tmpl.dtype)
+                continue
+            if "raw" in payload[k]:
+                out[k] = payload[k]["raw"]
+                continue
+            s = payload[k]["s"]
+            m, d = int(np.prod(tmpl.shape[1:-1])), int(tmpl.shape[-1])
+            # projection side is a pure function of the template shape;
+            # the basis round index rides in the payload
+            if self._sketch_mode(tmpl.shape) == "right":
+                q = self._basis(d, idx, payload[k]["rnd"])
+                xf = jnp.einsum("nmr,dr->nmd", s, q)
+            else:
+                q = self._basis(m, idx, payload[k]["rnd"])
+                xf = jnp.einsum("nrd,mr->nmd", s, q)
+            out[k] = xf.reshape(tmpl.shape).astype(tmpl.dtype)
+        return out
+
+    def roundtrip(self, flat: Dict, state: Optional[Dict] = None, rnd=0
+                  ) -> Tuple[Dict, Dict]:
+        """encode → decode in one step: what the server *receives* for a
+        stacked upload, plus the advanced error-feedback state.  This is
+        the engines' uplink primitive — the wire never needs to exist as
+        a separate buffer inside a fused round."""
+        like = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for k, v in flat.items()}
+        payload, new_state = self.encode(flat, state, rnd)
+        return self.decode(payload, like), new_state
+
+    def roundtrip_tree(self, tree: Dict, rnd=0) -> Dict:
+        """Stateless encode → decode of a single (unstacked) tree — the
+        downlink multicast path.  One payload serves a whole cohort, so
+        no per-client residual exists; downlink quantization error is
+        absorbed by the next round's local training instead."""
+        if self.is_identity:
+            return tree
+        flat = {k: v[None] for k, v in tree.items()}
+        dec, _ = self.roundtrip(flat, None, rnd)
+        return {k: v[0] for k, v in dec.items()}
+
+    # -- accounting ----------------------------------------------------
+    def bytes_on_wire(self, like: Dict) -> int:
+        """EXACT wire bytes for encoding ``like`` (arrays or
+        ``ShapeDtypeStruct`` templates with the stacked client axis).
+
+        Counts what a real transport would move: int8 = one code byte per
+        element + one f32 scale per tile; int4 = packed nibbles
+        (``ceil(L/2)`` bytes) + scales, even though the in-memory codes
+        stay int8; sketch = f32 sketch entries for projected leaves, raw
+        bytes for pass-through leaves; identity = the dense leaf bytes.
+        Every term is linear in the client axis, so per-client cost is
+        ``bytes_on_wire(like) // N``.
+        """
+        codec = self.spec.codec
+        total = 0
+        for k, tmpl in like.items():
+            n, ell = _leaf_dims(tmpl.shape)
+            dense = n * ell * np.dtype(tmpl.dtype).itemsize
+            if codec == "identity":
+                total += dense
+            elif codec == "int8":
+                total += n * (ell + 4 * self._tiles(ell))
+            elif codec == "int4":
+                total += n * (-(-ell // 2) + 4 * self._tiles(ell))
+            else:
+                mode = self._sketch_mode(tmpl.shape)
+                if mode == "raw":
+                    total += dense
+                else:
+                    m, d = (int(np.prod(tmpl.shape[1:-1])),
+                            int(tmpl.shape[-1]))
+                    r = self.spec.sketch_rank
+                    total += n * 4 * (m * r if mode == "right" else r * d)
+        return int(total)

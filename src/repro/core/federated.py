@@ -116,6 +116,19 @@ bit-for-bit.  :meth:`FederatedRunner.save_checkpoint` /
 draws and data-stream positions from the round counter alone, so resumed
 rounds are bit-identical to the uninterrupted run.
 
+Every tree that crosses the edge-cloud boundary — client uploads on
+every engine, the downlink redistribution — routes through ONE wire
+contract, :class:`repro.core.channel.Channel` (``channel=`` on the
+spec).  The identity codec is a literal pass-through (channel-less
+behaviour, bit-exact); quantized/sketched codecs encode inside the
+device phase (Pallas kernels on TPU), decode at the phase boundary
+before any reduction (order statistics need dense per-client values),
+carry per-client error-feedback residuals as client state (stacked
+``rt.chan_state`` or the store entries' ``"chan"`` key), and report
+exact measured traffic via :attr:`FederatedRunner.comm_stats`.  Codec
+state is jit DATA like membership — no codec, fault or sampling round
+retraces after warm-up.
+
 Ablation switches (use_mma / use_seccl / use_ccl) give the paper's Fig. 4
 variants; ``baseline`` selects Standalone / Multi-FedAvg comparisons.
 """
@@ -133,6 +146,7 @@ import numpy as np
 
 from repro.core import ccl as ccl_lib
 from repro.core import lora, mma, seccl
+from repro.core.channel import Channel, ChannelSpec
 from repro.core.faults import FaultSchedule
 from repro.core.spec import (CCL_SCORES, ENGINES, MODES, ClientCohort,
                              FaultSpec, FederationSpec, ParticipantSampler,
@@ -246,6 +260,9 @@ class FederatedConfig:
                                      # sampling over the registered
                                      # population (None = all clients
                                      # participate every round)
+    channel: Optional[ChannelSpec] = None  # wire codec for every
+                                     # edge-crossing tree (None = identity,
+                                     # bit-exact pre-channel behaviour)
 
     def __post_init__(self):
         if self.n_devices < 1:
@@ -346,6 +363,12 @@ class FederatedRunner:
             raise ValueError(f"unknown engine {self.engine!r}")
         if cfg.staleness > 0 and self.engine != "overlap":
             raise ValueError("staleness > 0 requires the overlap engine")
+
+        # the wire codec: ONE channel object shared by every edge-crossing
+        # path (uplink encode in the engines, downlink multicast, bytes
+        # accounting).  identity = the bit-exact pre-channel behaviour.
+        self.channel = (spec.channel if spec.channel is not None
+                        else ChannelSpec()).make()
 
         if isinstance(mesh, (list, tuple)):
             if len(mesh) != spec.n_cohorts:
@@ -461,8 +484,16 @@ class FederatedRunner:
         # the updates back (device memory scales with the working set)
         if self._store is not None:
             for j in range(N):
-                self._store.put(j, {"train": lora.partition(device_params[j]),
-                                    "opt": device_opt[j]})
+                entry = {"train": lora.partition(device_params[j]),
+                         "opt": device_opt[j]}
+                if self.channel.stateful:
+                    # per-client error-feedback residual rides in the store
+                    # entry so it spills to disk and replays through
+                    # checkpoint/resume with the rest of the personal state
+                    entry["chan"] = jax.tree.map(
+                        lambda a: np.zeros(np.shape(a), np.float32),
+                        lora.partition(device_params[j], lora.is_lora_leaf))
+                self._store.put(j, entry)
         self.server_llm_opt = opt.init(lora.partition(self.server_llm))
         self.server_slm_opt = opt.init(lora.partition(self.server_slm))
 
@@ -514,6 +545,36 @@ class FederatedRunner:
         # per-client uploads and runs EAGERLY (one shared op sequence
         # across engines), so robust != "mean" takes the split schedule
         self._fused = self._homogeneous and cfg.robust == "mean"
+
+        # channel runtime per cohort: the stacked upload template (what
+        # crosses the wire each round), the error-feedback residual state,
+        # and the EXACT per-round byte costs (Channel.bytes_on_wire is
+        # linear in the client axis, so per-client = total // work_n).
+        ident = ChannelSpec().make()
+        for rt in self._cohorts:
+            up0 = lora.partition(device_params[rt.offset], lora.is_lora_leaf)
+            rt.up_like = {
+                k: jax.ShapeDtypeStruct((rt.work_n,) + v.shape, v.dtype)
+                for k, v in up0.items()}
+            rt.chan_state = self.channel.init_state(rt.up_like)
+            rt.uplink_client_bytes = (
+                self.channel.bytes_on_wire(rt.up_like) // rt.work_n)
+            rt.dense_client_bytes = (
+                ident.bytes_on_wire(rt.up_like) // rt.work_n)
+            # the paper's Fig. 3 baseline is dense float32 uploads — the
+            # actual leaves may be bf16, so track both references
+            rt.f32_client_bytes = 4 * sum(
+                int(np.prod(v.shape)) for v in up0.values())
+            down_like = {k: server_lora[k] for k in rt.shared}
+            down_like.update({k: up0[k] for k in rt.own})
+            rt.downlink_bytes = self.channel.bytes_on_wire(
+                {k: jax.ShapeDtypeStruct((1,) + v.shape, v.dtype)
+                 for k, v in down_like.items()})
+        self._bytes_up = 0
+        self._bytes_up_dense = 0
+        self._bytes_up_f32 = 0
+        self._bytes_down = 0
+        self.comm_log: List[Dict] = []
 
         # the stream bank: one infinite shuffle stream per GLOBAL client id
         # (plus the server's), pulled only for the clients a round actually
@@ -696,6 +757,10 @@ class FederatedRunner:
         for rt in self._cohorts:
             rt.stacked_params = clients(rt.stacked_params)
             rt.stacked_opt = clients(rt.stacked_opt)
+            if rt.chan_state:
+                # error-feedback residuals shard with the clients they
+                # belong to (leading axis = client axis)
+                rt.chan_state = clients(rt.chan_state)
             rt.last_global = repl(rt.last_global)
             rt.weights = repl(rt.weights)
         self.server_llm = repl(self.server_llm)
@@ -807,6 +872,68 @@ class FederatedRunner:
         if self._rnd_scale is None:
             return None
         return jnp.asarray(self._rnd_scale[rt.work_slice])
+
+    def _chan_state_for(self, rt: _Cohort):
+        """Cohort ``rt``'s error-feedback residual stack — None for
+        stateless codecs (the phase functions then keep their
+        channel-free default traces)."""
+        return rt.chan_state if self.channel.stateful else None
+
+    def _chan_rnd(self):
+        """This round's index as traced DATA for the channel (freshens
+        sketch bases without retracing) — None under identity, so the
+        pre-channel call signatures stay bit-identical."""
+        if self.channel.is_identity:
+            return None
+        return jnp.asarray(self._rnd_no, jnp.int32)
+
+    def _commit_comm(self) -> None:
+        """Account one round's measured bytes-on-wire: per cohort, every
+        PRESENT member's compressed upload (stragglers transmit too —
+        late, weight 0 — but offline clients send nothing) plus one
+        multicast downlink payload.  Standalone rounds move nothing."""
+        if self.cfg.mode == "standalone":
+            self.comm_log.append(
+                {"round": self._rnd_no, "uplink": 0, "downlink": 0})
+            return
+        up = up_dense = up_f32 = down = 0
+        for rt in self._cohorts:
+            n = rt.work_n
+            if self._rnd_present is not None:
+                n = int(np.asarray(
+                    self._rnd_present[rt.work_slice]).sum())
+            up += n * rt.uplink_client_bytes
+            up_dense += n * rt.dense_client_bytes
+            up_f32 += n * rt.f32_client_bytes
+            down += rt.downlink_bytes
+        self._bytes_up += up
+        self._bytes_up_dense += up_dense
+        self._bytes_up_f32 += up_f32
+        self._bytes_down += down
+        self.comm_log.append({"round": self._rnd_no, "uplink": int(up),
+                              "downlink": int(down)})
+
+    @property
+    def comm_stats(self) -> Dict:
+        """Measured wire-traffic totals: codec, exact uplink/downlink
+        bytes across all committed rounds, the dense-f32 uplink the same
+        transmissions would have cost, and the resulting compression
+        ratio (the benchmark's acceptance measurement — computed from
+        :meth:`Channel.bytes_on_wire`, not estimated)."""
+        up = int(self._bytes_up)
+        dense = int(self._bytes_up_dense)
+        f32 = int(self._bytes_up_f32)
+        return {"codec": self.channel.spec.codec,
+                "rounds": len(self.comm_log),
+                "uplink_bytes": up,
+                "uplink_dense_bytes": dense,
+                "uplink_f32_bytes": f32,
+                "uplink_ratio": (dense / up) if up else float("inf"),
+                "uplink_ratio_f32": (f32 / up) if up else float("inf"),
+                "downlink_bytes": int(self._bytes_down),
+                "uplink_client_bytes": {
+                    rt.idx: rt.uplink_client_bytes
+                    for rt in self._cohorts}}
 
     # ------------------------------------------------------------------
     def _make_seccl_step(self):
@@ -935,6 +1062,7 @@ class FederatedRunner:
         se_step = self._se_step_raw
         do_seccl = _do_seccl(cfg)
         with_faults = self._faults is not None
+        chan = self.channel
         scale = (jnp.asarray(self._attack_scale)
                  if self._attack_scale is not None else None)
 
@@ -950,7 +1078,8 @@ class FederatedRunner:
 
         def round_fn(states, server_llm, server_slm, server_llm_opt,
                      server_slm_opt, last_globals, weights, pubs, privs,
-                     server_steps, present, scales=None):
+                     server_steps, present, scales=None, chan_states=None,
+                     rnd=None):
             # per-round Byzantine scale: the population-order closure
             # constant normally; under participant sampling the gathered
             # (S,) vector arrives as data (every sampled round passes it,
@@ -971,7 +1100,8 @@ class FederatedRunner:
 
             if cfg.mode == "standalone":
                 return (post_amt, ((p, o),), server_llm, server_slm,
-                        server_llm_opt, server_slm_opt, last_globals)
+                        server_llm_opt, server_slm_opt, last_globals,
+                        chan_states)
 
             # (3) MMA aggregation (Eq. 13) over the stacked upload axis;
             # under faults the weights arrive pre-renormalized over the
@@ -980,14 +1110,30 @@ class FederatedRunner:
                 lora.partition(p, lora.is_lora_leaf))
             if sc is not None:
                 uploads = _scale_uploads(uploads, sc)
+            # the wire: what the server receives is the channel roundtrip
+            # of the (possibly Byzantine-scaled) uploads.  Error-feedback
+            # residuals advance only for clients that actually transmitted
+            # (the same presence mask that froze their training).
+            if not chan.is_identity:
+                dec, new_cs = chan.roundtrip(
+                    uploads.trainable,
+                    chan_states[0] if chan.stateful else None, rnd)
+                if chan.stateful:
+                    if with_faults:
+                        new_cs = _where_clients(present[0], new_cs,
+                                                chan_states[0])
+                    chan_states = (new_cs,)
+                uploads = lora.StackedClients(dec)
             agg = mma.aggregate_stacked(uploads, weights[0])
 
             if cfg.mode == "fedavg":
                 # Multi-FedAvg: broadcast the average straight back
-                p = deliver(p, uploads, agg,
+                # (through the downlink channel — one multicast payload)
+                rx = chan.roundtrip_tree(agg, rnd)
+                p = deliver(p, uploads, rx,
                             present[0] if with_faults else None)
                 return (post_amt, ((p, o),), server_llm, server_slm,
-                        server_llm_opt, server_slm_opt, (agg,))
+                        server_llm_opt, server_slm_opt, (rx,), chan_states)
 
             server_slm = lora.combine(server_slm, agg)
 
@@ -1004,12 +1150,14 @@ class FederatedRunner:
                         (server_llm, server_slm, server_llm_opt,
                          server_slm_opt), server_steps)
 
-            # (5) redistribute server-SLM LoRA to every device (broadcast)
-            down = lora.partition(server_slm, lora.is_lora_leaf)
+            # (5) redistribute server-SLM LoRA to every device (broadcast
+            # through the downlink channel; clients see the decoded tree)
+            down = chan.roundtrip_tree(
+                lora.partition(server_slm, lora.is_lora_leaf), rnd)
             p = deliver(p, uploads, down,
                         present[0] if with_faults else None)
             return (post_amt, ((p, o),), server_llm, server_slm,
-                    server_llm_opt, server_slm_opt, (down,))
+                    server_llm_opt, server_slm_opt, (down,), chan_states)
 
         return jax.jit(round_fn)
 
@@ -1176,6 +1324,11 @@ class FederatedRunner:
                                            axis=0, device=dev)
             rt.stacked_params = lora.combine(rt.stacked_params, train)
             rt.stacked_opt = opt
+            if "chan" in h:
+                # each sampled member brings its own error-feedback
+                # residual into the working-set channel state
+                rt.chan_state = shard_part.place_stacked(
+                    h["chan"], m, TRAIN_RULES, axis=0, device=dev)
 
     def _load_working_set(self) -> None:
         """Gather this round's sampled members (drawn by
@@ -1206,9 +1359,11 @@ class FederatedRunner:
             return
         for rt in self._cohorts:
             ids = [rt.offset + int(i) for i in self._rnd_locals[rt.idx]]
-            self._store.scatter(ids, {
-                "train": lora.partition(rt.stacked_params),
-                "opt": rt.stacked_opt})
+            entry = {"train": lora.partition(rt.stacked_params),
+                     "opt": rt.stacked_opt}
+            if self.channel.stateful:
+                entry["chan"] = rt.chan_state
+            self._store.scatter(ids, entry)
 
     def _stage_next_gather(self) -> None:
         """Overlap engine: start the NEXT round's store gather on a daemon
@@ -1262,6 +1417,35 @@ class FederatedRunner:
             out.append({k: (p[k] / np.float32(wt)).astype(rt.own_dtypes[k])
                         for k in rt.own})
         return tuple(out)
+
+    def _decode_payloads(self, payloads):
+        """Decode the cohorts' device-phase WIRE payloads back into the
+        forms the identity schedule produces, eagerly, before any
+        reduction.  Non-identity device phases return
+        ``{"enc": codes, "state": new_residuals}`` — the server side of
+        the channel pops the advanced error-feedback state, decodes the
+        codes against the cohort's upload template, and only then reduces
+        (robust order statistics sort per-client values, so they MUST see
+        dense uploads — the decode-before-reduce rule, the same tension
+        PR 7 documented for secure aggregation).  Identity payloads pass
+        through untouched (the pre-channel graph, bit for bit)."""
+        if self.channel.is_identity:
+            return payloads
+        cfg = self.cfg
+        out = []
+        for rt, pl in zip(self._cohorts, payloads):
+            if self.channel.stateful:
+                rt.chan_state = pl["state"]
+            dec = self.channel.decode(pl["enc"], rt.up_like)
+            if cfg.robust != "mean":
+                out.append(dec)
+            elif self._homogeneous:
+                out.append(mma.aggregate_stacked(
+                    lora.StackedClients(dec), self._weights_for(rt)))
+            else:
+                out.append(mma.partial_aggregate_stacked(
+                    lora.StackedClients(dec), self._weights_for(rt)))
+        return out
 
     def _combine_payloads(self, payloads, device=None):
         """Fold the cohorts' device-phase payloads into the server-bound
@@ -1349,8 +1533,11 @@ class FederatedRunner:
         stacked tree and remember it as the prox/redistribution
         reference."""
         for c, rt in enumerate(self._cohorts):
-            delivery = self._to_client_placement(
-                rt, self._cohort_delivery(rt, down, own_avgs[c]))
+            delivery = self._cohort_delivery(rt, down, own_avgs[c])
+            # downlink channel: one multicast payload per cohort; clients
+            # (and the prox reference) see the DECODED tree
+            delivery = self.channel.roundtrip_tree(delivery, self._rnd_no)
+            delivery = self._to_client_placement(rt, delivery)
             rt.stacked_params = self._redistribute(
                 rt, rt.stacked_params, delivery)
             rt.last_global = delivery
@@ -1387,6 +1574,7 @@ class FederatedRunner:
         multi = not self._homogeneous
         robust = cfg.robust
         with_faults = self._faults is not None
+        chan = self.channel
         on_cpu = jax.default_backend() == "cpu"
         # under faults the pre-round stacked state feeds the freeze-select,
         # so the opt buffers cannot be donated to the chain
@@ -1400,7 +1588,7 @@ class FederatedRunner:
 
             def device_phase(stacked_params, stacked_opt, anchor_llm,
                              last_global, weights, pub_steps, priv_steps,
-                             present, scale=None):
+                             present, scale=None, chan_state=None, rnd=None):
                 # population-order closure constant normally; the sampled
                 # (work_n,) gather arrives as a traced argument under a
                 # sampler (passed every round, so one warm trace)
@@ -1422,6 +1610,21 @@ class FederatedRunner:
                     lora.partition(stacked_params, lora.is_lora_leaf))
                 if sc is not None:
                     uploads = _scale_uploads(uploads, sc)
+                if not chan.is_identity:
+                    # the device/server phase boundary IS the wire: the
+                    # payload that leaves this jit holds the codec's
+                    # on-wire form (int8 codes + scales / sketch factors),
+                    # and the runner decodes it eagerly before any
+                    # reduction (see _decode_payloads — order-statistic
+                    # robust reductions need dense per-client values)
+                    enc, new_state = chan.encode(
+                        uploads.trainable,
+                        chan_state if chan.stateful else None, rnd)
+                    if chan.stateful and with_faults:
+                        new_state = _where_clients(present, new_state,
+                                                   chan_state)
+                    return (stacked_params, stacked_opt,
+                            {"enc": enc, "state": new_state})
                 if robust != "mean":
                     # robust reductions are order statistics over the
                     # client axis — they need the RAW uploads at the
@@ -1523,7 +1726,8 @@ class FederatedRunner:
             post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
                 rt.stacked_params, rt.stacked_opt, anchor_llm,
                 rt.last_global, self._weights_for(rt), pubs[c], privs[c],
-                self._present_for(rt), self._scale_for(rt))
+                self._present_for(rt), self._scale_for(rt),
+                self._chan_state_for(rt), self._chan_rnd())
             rt.stacked_params = post_amt
             post_amts.append(post_amt)
             payloads.append(payload)
@@ -1531,13 +1735,16 @@ class FederatedRunner:
         if cfg.mode == "standalone":
             self._scatter_working_set()
             self._stage_next_gather()
+            self._commit_comm()
             if not evaluate:
                 return {}
             return self._finalize_eval(
                 self._evaluate_clients(post_amt=post_amts))
 
-        # the 0.65 %-volume uplink: the cohorts' partials land on the
-        # server device, where the shared-subset combine runs
+        # the 0.65 %-volume uplink: the cohorts' wire payloads decode at
+        # the phase boundary, then land on the server device for the
+        # shared-subset combine
+        payloads = self._decode_payloads(payloads)
         agg, own_avgs = self._combine_payloads(payloads,
                                                device=self._server_device)
 
@@ -1572,6 +1779,7 @@ class FederatedRunner:
         # in the background while this round's eval / next dispatch runs
         self._scatter_working_set()
         self._stage_next_gather()
+        self._commit_comm()
 
         if not evaluate:
             return {}
@@ -1620,13 +1828,21 @@ class FederatedRunner:
         pres = tuple(self._present_for(rt) for rt in self._cohorts)
         scs = (tuple(self._scale_for(rt) for rt in self._cohorts)
                if self._rnd_scale is not None else None)
+        css = (tuple(rt.chan_state for rt in self._cohorts)
+               if self.channel.stateful else None)
         (post_amt, states, self.server_llm, self.server_slm,
-         self.server_llm_opt, self.server_slm_opt, lgs) = self._round_fn(
+         self.server_llm_opt, self.server_slm_opt, lgs,
+         css) = self._round_fn(
             states, self.server_llm, self.server_slm, self.server_llm_opt,
-            self.server_slm_opt, lgs, ws, pubs, privs, server, pres, scs)
+            self.server_slm_opt, lgs, ws, pubs, privs, server, pres, scs,
+            css, self._chan_rnd())
         for rt, (p, o), lg in zip(self._cohorts, states, lgs):
             rt.stacked_params, rt.stacked_opt, rt.last_global = p, o, lg
+        if self.channel.stateful:
+            for rt, cs in zip(self._cohorts, css):
+                rt.chan_state = cs
         self._scatter_working_set()
+        self._commit_comm()
 
         if not evaluate:
             return {}
@@ -1648,12 +1864,14 @@ class FederatedRunner:
             post_amt, rt.stacked_opt, payload = self._device_phase_fns[c](
                 rt.stacked_params, rt.stacked_opt, self.server_llm,
                 rt.last_global, self._weights_for(rt), pubs[c], privs[c],
-                self._present_for(rt), self._scale_for(rt))
+                self._present_for(rt), self._scale_for(rt),
+                self._chan_state_for(rt), self._chan_rnd())
             rt.stacked_params = post_amt
             post_amts.append(post_amt)
             payloads.append(payload)
 
         if cfg.mode != "standalone":
+            payloads = self._decode_payloads(payloads)
             agg, own_avgs = self._combine_payloads(payloads)
             if cfg.mode == "fedavg":
                 self._apply_deliveries(agg, own_avgs)
@@ -1664,6 +1882,7 @@ class FederatedRunner:
                     self.server_slm_opt, self._stable_agg(agg), server)
                 self._apply_deliveries(down, own_avgs)
         self._scatter_working_set()
+        self._commit_comm()
 
         if not evaluate:
             return {}
@@ -1735,8 +1954,13 @@ class FederatedRunner:
                                               self._pull_jnp(f"priv/{j}"),
                                               None, gref)
                 if sampled:
-                    self._store.put(j, {"train": lora.partition(p),
-                                        "opt": o})
+                    entry = {"train": lora.partition(p), "opt": o}
+                    if self.channel.stateful:
+                        # the put overwrites the WHOLE entry — carry the
+                        # error-feedback residual forward (it advances in
+                        # _loop_encode_uploads after all members train)
+                        entry["chan"] = self._store.get(j)["chan"]
+                    self._store.put(j, entry)
                 else:
                     rt.device_params[i], rt.device_opt[i] = p, o
                 ups.append(lora.partition(p, lora.is_lora_leaf))
@@ -1753,7 +1977,13 @@ class FederatedRunner:
         client_eval = self._evaluate_clients() if evaluate else None
 
         if cfg.mode == "standalone":
+            self._commit_comm()
             return self._finalize_eval(client_eval) if evaluate else {}
+
+        # the uplink wire: every member's (possibly Byzantine-scaled)
+        # report crosses the channel before any reduction sees it
+        if not self.channel.is_identity:
+            uploads = self._loop_encode_uploads(uploads)
 
         # (3) MMA aggregation (Eq. 13) with the weights computed at init
         # (MER masks are static) — shared with the stacked engines, so the
@@ -1781,11 +2011,15 @@ class FederatedRunner:
 
         if cfg.mode == "fedavg":
             # Multi-FedAvg: broadcast the average straight back (offline
-            # clients receive nothing)
+            # clients receive nothing; the broadcast crosses the downlink
+            # channel once per cohort)
             for c, rt in enumerate(self._cohorts):
-                delivery = self._cohort_delivery(rt, agg, own_avgs[c])
+                delivery = self.channel.roundtrip_tree(
+                    self._cohort_delivery(rt, agg, own_avgs[c]),
+                    self._rnd_no)
                 rt.last_global = delivery
                 self._loop_deliver(rt, delivery, pres)
+            self._commit_comm()
             return self._finalize_eval(client_eval) if evaluate else {}
 
         self.server_slm = lora.combine(self.server_slm, agg)
@@ -1807,9 +2041,11 @@ class FederatedRunner:
         # clients receive nothing)
         down = lora.partition(self.server_slm, lora.is_lora_leaf)
         for c, rt in enumerate(self._cohorts):
-            delivery = self._cohort_delivery(rt, down, own_avgs[c])
+            delivery = self.channel.roundtrip_tree(
+                self._cohort_delivery(rt, down, own_avgs[c]), self._rnd_no)
             rt.last_global = delivery
             self._loop_deliver(rt, delivery, pres)
+        self._commit_comm()
         return self._finalize_eval(client_eval) if evaluate else {}
 
     def _loop_deliver(self, rt: _Cohort, delivery: Dict, pres) -> None:
@@ -1834,7 +2070,49 @@ class FederatedRunner:
             for k, v in delivery.items():
                 if k in tr:
                     tr[k] = np.asarray(v)
-            self._store.put(j, {"train": tr, "opt": st["opt"]})
+            # dict(st, ...) keeps every other entry key — notably the
+            # channel's "chan" error-feedback residual — intact
+            self._store.put(j, dict(st, train=tr))
+
+    def _loop_encode_uploads(self, uploads: List[List[Dict]]
+                             ) -> List[List[Dict]]:
+        """Roundtrip the loop engine's per-client uploads through the
+        channel, stacked per cohort — quantized tiles never cross the
+        client axis, so the stacked encode equals each client encoding
+        alone while reproducing the stacked engines' exact op sequence.
+        Error-feedback residuals live in ``rt.chan_state`` (resident) or
+        each member's store entry under a sampler; they advance only for
+        PRESENT clients and return to where they came from."""
+        chan = self.channel
+        sampled = self._schedule is not None
+        out = []
+        for rt, ups in zip(self._cohorts, uploads):
+            stacked = lora.StackedClients.stack(ups).trainable
+            st = ids = None
+            if chan.stateful:
+                if sampled:
+                    ids = [rt.offset + int(i)
+                           for i in self._rnd_locals[rt.idx]]
+                    st = {k: jnp.asarray(v) for k, v in
+                          self._store.gather(ids)["chan"].items()}
+                else:
+                    st = rt.chan_state
+            dec, new_state = chan.roundtrip(stacked, st, self._rnd_no)
+            if chan.stateful:
+                pres_c = self._present_for(rt)
+                if pres_c is not None:
+                    new_state = _where_clients(pres_c, new_state, st)
+                if sampled:
+                    for pos, cid in enumerate(ids):
+                        entry = dict(self._store.get(cid))
+                        entry["chan"] = jax.tree.map(
+                            lambda a, _p=pos: np.asarray(a[_p]), new_state)
+                        self._store.put(cid, entry)
+                else:
+                    rt.chan_state = new_state
+            out.append([{k: v[i] for k, v in dec.items()}
+                        for i in range(len(ups))])
+        return out
 
     # ------------------------------------------------------------------
     def jit_cache_sizes(self) -> Dict[str, int]:
@@ -1949,7 +2227,7 @@ class FederatedRunner:
                 (tuple(lora.partition(p) for p in rt.device_params),
                  tuple(rt.device_opt))
                 for rt in self._cohorts)
-        return {
+        state = {
             "round": np.int64(self._round_idx),
             "server_llm": self.server_llm,
             "server_slm": self.server_slm,
@@ -1958,6 +2236,12 @@ class FederatedRunner:
             "last_global": tuple(rt.last_global for rt in self._cohorts),
             "clients": clients,
         }
+        if self.channel.stateful and self._schedule is None:
+            # error-feedback residuals (under a sampler they already ride
+            # in the store entries above; identity/sketch runs add no key
+            # — the checkpoint format is unchanged for them)
+            state["channel"] = tuple(rt.chan_state for rt in self._cohorts)
+        return state
 
     def save_checkpoint(self, mgr, step: Optional[int] = None) -> int:
         """Write the run state at the current round boundary; returns the
@@ -2044,6 +2328,14 @@ class FederatedRunner:
                     rt.device_params[i] = lora.combine(
                         rt.device_params[i], tr)
                     rt.device_opt[i] = o
+        if "channel" in state:
+            for rt, cs in zip(self._cohorts, state["channel"]):
+                if self._stacked:
+                    rt.chan_state = shard_part.place_stacked(
+                        cs, self._mesh_for(rt.idx), TRAIN_RULES, axis=0,
+                        device=getattr(self, "_client_device", None))
+                else:
+                    rt.chan_state = jax.tree.map(jnp.asarray, cs)
 
         # data streams: re-create at position 0 and replay the completed
         # rounds' pull counts

@@ -18,6 +18,7 @@ from typing import Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def path_str(path) -> str:
@@ -161,12 +162,31 @@ def n_params(tree) -> int:
 
 
 def communicated_fraction(params,
-                          predicate: Callable[[str], bool] = is_lora_leaf
-                          ) -> float:
+                          predicate: Callable[[str], bool] = is_lora_leaf,
+                          channel=None) -> float:
     """Fraction of total parameter volume communicated per round (paper
-    Fig. 3: 0.65 % for the r=8 SLM)."""
-    comm = n_params(partition(params, lambda p: predicate(p)))
-    return comm / max(1, n_params(params))
+    Fig. 3: 0.65 % for the r=8 SLM).
+
+    With ``channel=None`` this is the historical *count* fraction
+    (communicated parameters / total parameters).  Pass a
+    :class:`repro.core.channel.Channel` (or ``ChannelSpec``) and it
+    becomes a *byte* fraction instead: the codec's exact
+    ``bytes_on_wire`` for the communicated leaves over the dense byte
+    size of the full model — so an int8 channel reports roughly a
+    quarter of the f32 identity figure, matching the engines'
+    ``comm_stats`` accounting.
+    """
+    flat = partition(params, lambda p: predicate(p))
+    if channel is None:
+        return n_params(flat) / max(1, n_params(params))
+    channel = channel.make() if hasattr(channel, "make") else channel
+    # leaves may be arrays OR eval_shape ShapeDtypeStructs — touch only
+    # .shape/.dtype so the abstract (no-weights) benchmark path works
+    like = {k: jax.ShapeDtypeStruct((1,) + tuple(v.shape), v.dtype)
+            for k, v in flat.items()}
+    total = sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+                for x in jax.tree.leaves(params))
+    return channel.bytes_on_wire(like) / max(1, total)
 
 
 def merge_lora(params, cfg):

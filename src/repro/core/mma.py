@@ -29,6 +29,14 @@ order statistics, fundamentally incompatible with pre-summed partials
 (and with secure-aggregation masked sums), so under ``robust != "mean"``
 the cohort form exchanges raw stacked uploads and reduces per shared key
 via :func:`robust_combine_cohorts` instead of partial sums.
+
+The same tension governs the compressed wire format
+(:mod:`repro.core.channel`): quantized/sketched payloads must be DECODED
+back to dense per-client values before any reduction here runs — order
+statistics over int8 codes with heterogeneous per-tile scales are
+meaningless.  The engines decode at the device/server phase boundary
+(``FederatedRunner._decode_payloads``); every ``aggregate_stacked`` /
+``partial_aggregate_stacked`` input is already dense.
 """
 from __future__ import annotations
 

@@ -41,6 +41,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.channel import ChannelSpec
 
 MODES = ("mlecs", "standalone", "fedavg")
 ENGINES = ("loop", "vectorized", "overlap")
@@ -307,6 +308,7 @@ class FederationSpec:
     trim_frac: float = 0.2           # fraction trimmed from EACH end
     faults: Optional[FaultSpec] = None
     sampler: Optional[ParticipantSampler] = None
+    channel: Optional[ChannelSpec] = None    # wire codec (None = identity)
 
     def __post_init__(self):
         cohorts = tuple(self.cohorts)
@@ -320,6 +322,10 @@ class FederationSpec:
         if self.sampler is not None:
             # resolve+validate per-cohort sample counts now, not mid-run
             self.sampler.counts([c.n_clients for c in cohorts])
+        if self.channel is not None and not isinstance(self.channel,
+                                                       ChannelSpec):
+            raise TypeError(
+                f"channel must be a ChannelSpec; got {type(self.channel)}")
         # anchored CCL and cross-cohort aggregation need ONE connector
         # latent space: every cohort SLM, the server SLM and the server LLM
         # must agree on the modality interface (the paper's "unified latent
@@ -445,4 +451,4 @@ _PROTOCOL_FIELDS = (
     "rounds", "local_steps_ccl", "local_steps_amt", "server_steps",
     "batch_size", "lr", "rho", "n_negatives", "seed", "engine", "staleness",
     "use_mma", "use_seccl", "use_ccl", "mode", "kt_weight", "prox_weight",
-    "ccl_score", "robust", "trim_frac", "faults", "sampler")
+    "ccl_score", "robust", "trim_frac", "faults", "sampler", "channel")

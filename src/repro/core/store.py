@@ -32,6 +32,14 @@ SORTED, so a full-population sample is the identity permutation and the
 working set lists clients in global order (the engines' metric/aggregation
 order).  Checkpoint/resume needs no sampler state: round ``r``'s draw is a
 pure function of ``(seed, r)``.
+
+Under a stateful wire codec (:mod:`repro.core.channel` with error
+feedback) each entry carries a third key next to ``"train"``/``"opt"``:
+``"chan"``, the client's f32 quantization residual.  ``put``/``scatter``
+overwrite WHOLE entries, so every engine write-back site must carry
+``"chan"`` forward explicitly — residuals then ride the npz spill,
+``state_pytree()`` and checkpoint/resume for free, which is what makes a
+resumed EF trajectory bit-identical.
 """
 from __future__ import annotations
 

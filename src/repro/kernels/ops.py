@@ -14,6 +14,8 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gram_volume import gram_log_volume as _gram
 from repro.kernels.lora_matmul import lora_matmul as _lora
 from repro.kernels.paged_attention import paged_flash_attention as _paged
+from repro.kernels.quantize import dequantize_rows as _dequant
+from repro.kernels.quantize import quantize_rows as _quant
 from repro.kernels.ssd_scan import ssd_chunk as _ssd_chunk
 
 
@@ -100,6 +102,55 @@ def gram_log_volume(vs, mask=None, eps: float = 1e-5, interpret=None):
             [mask, jnp.zeros((pad, k), mask.dtype)])
     out = _gram(vs, mask, eps=eps, bb=bb, interpret=interpret)
     return out[:B] if pad else out
+
+
+def quantize(x, qmax: int = 127, *, use_kernel=None, interpret=None):
+    """Per-row symmetric abs-max quantization.  x: (R, L) — one wire tile
+    per row — returns ``(q int8 (R, L), scale f32 (R,))``.
+
+    ``use_kernel`` None = Pallas kernel on TPU, pure-jnp twin elsewhere
+    (the twin IS the oracle math, so CPU engine parity is exact).  The
+    kernel grid needs R to be a multiple of the 128-row block, so prime
+    row counts are padded with all-zero rows (scale 0, codes 0) and
+    sliced off — same precedent as ``gram_log_volume``.
+    """
+    if use_kernel is None:
+        use_kernel = not default_interpret()
+    if use_kernel:
+        interpret = default_interpret() if interpret is None else interpret
+        R = x.shape[0]
+        br = R if R <= 128 else 128
+        pad = -R % br
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, x.shape[1]), x.dtype)])
+        q, s = _quant(x, qmax=qmax, br=br, interpret=interpret)
+        return (q[:R], s[:R]) if pad else (q, s)
+    xf = x.astype(jnp.float32)
+    # scale := absmax * (1/qmax) — bitwise-pinned to ref.quantize_ref
+    scale = jnp.max(jnp.abs(xf), axis=-1) * jnp.float32(1.0 / qmax)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[:, None]), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale, *, use_kernel=None, interpret=None):
+    """Inverse of :func:`quantize`: (R, L) int8 + (R,) f32 scales -> f32."""
+    if use_kernel is None:
+        use_kernel = not default_interpret()
+    if use_kernel:
+        interpret = default_interpret() if interpret is None else interpret
+        R = q.shape[0]
+        br = R if R <= 128 else 128
+        pad = -R % br
+        if pad:
+            q = jnp.concatenate(
+                [q, jnp.zeros((pad, q.shape[1]), q.dtype)])
+            scale = jnp.concatenate(
+                [scale, jnp.zeros((pad,), scale.dtype)])
+        out = _dequant(q, scale, br=br, interpret=interpret)
+        return out[:R] if pad else out
+    return q.astype(jnp.float32) * scale[:, None]
 
 
 def lora_matmul(x, w, a, b, scale: float = 1.0, interpret=None, **blocks):

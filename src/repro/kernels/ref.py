@@ -89,6 +89,36 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lens,
 
 
 # ---------------------------------------------------------------------------
+# quantize / dequantize (wire codec tiles)
+
+def quantize_ref(x, qmax: int):
+    """Per-row symmetric abs-max quantization oracle.
+
+    x: (R, L) — each row is one wire tile.  Returns ``(q, scale)`` with
+    ``q`` int8 in [-qmax, qmax] and ``scale`` f32 (R,) such that
+    ``q * scale`` reconstructs the row to within scale/2 per element.
+    All-zero rows get scale 0 and quantize to exact zeros (the padded-row
+    case), so dequantize(quantize(0)) == 0 without a special case.
+
+    The scale is DEFINED as ``absmax * (1/qmax)`` — a single f32 multiply
+    — rather than ``absmax / qmax``: XLA strength-reduces division by a
+    constant to a reciprocal multiply in some lowerings but not others,
+    so the divide form is one ULP away from itself across eager / jit /
+    Pallas-interpret contexts, breaking the bitwise kernel-vs-twin pin.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) * jnp.float32(1.0 / qmax)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[:, None]), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q, scale):
+    """Inverse of :func:`quantize_ref`: (R, L) int8 + (R,) f32 -> (R, L) f32."""
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+# ---------------------------------------------------------------------------
 # ssd intra-chunk
 
 def ssd_chunk_ref(x, dt, cum, B_, C_):

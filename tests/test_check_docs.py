@@ -1,4 +1,5 @@
-"""The CI docs gate (tools/check_docs.py): README + module-docstring checks."""
+"""The CI docs gate (tools/check_docs.py): README + module-docstring checks
+and the channel public-API gate."""
 import pathlib
 import subprocess
 import sys
@@ -31,6 +32,26 @@ def test_missing_docstring_fails(tmp_path):
     assert check_docs.main(["check_docs", str(repo)]) == 1
     bad = check_docs.missing_docstrings(repo / "src" / "repro")
     assert len(bad) == 1 and bad[0][0].name == "mod.py"
+
+
+def test_undocumented_channel_api_fails(tmp_path):
+    """The wire-format contract's public API is gated: an undocumented
+    public method in core/channel.py fails the docs gate."""
+    repo = _mini_repo(tmp_path)
+    core = repo / "src" / "repro" / "core"
+    core.mkdir()
+    chan = core / "channel.py"
+    chan.write_text('"""doc."""\n\nclass Channel:\n    """doc."""\n'
+                    "    def encode(self, x):\n        return x\n"
+                    "    def _private(self):\n        pass\n")
+    assert check_docs.main(["check_docs", str(repo)]) == 1
+    bad = check_docs.undocumented_public_api(chan)
+    assert len(bad) == 1 and "Channel.encode" in bad[0][1]
+    # documenting it clears the gate
+    chan.write_text('"""doc."""\n\nclass Channel:\n    """doc."""\n'
+                    '    def encode(self, x):\n        """doc."""\n'
+                    "        return x\n")
+    assert check_docs.main(["check_docs", str(repo)]) == 0
 
 
 def test_this_repo_is_clean():

@@ -1,5 +1,9 @@
-"""Docs gate for CI: README.md must exist and every module under
-``src/repro/**/*.py`` must carry a non-empty module docstring.
+"""Docs gate for CI: README.md must exist, every module under
+``src/repro/**/*.py`` must carry a non-empty module docstring, and the
+wire-format contract (``src/repro/core/channel.py``) must document its
+entire public API — every public class, function and method (the channel
+is the single cross-architecture contract, so an undocumented codec knob
+is a correctness hazard, not a style nit).
 
 Pure stdlib (ast), no repo imports — safe to run before dependencies are
 installed.  Exit status 0 when clean, 1 with a findings list otherwise.
@@ -29,6 +33,31 @@ def missing_docstrings(src_root: pathlib.Path) -> list:
     return bad
 
 
+def undocumented_public_api(path: pathlib.Path) -> list:
+    """Public (non-underscore) classes / functions / methods in ``path``
+    that lack a docstring.  Dunder methods and dataclass field blocks are
+    exempt — only callables a user would reach for are gated."""
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    bad = []
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.ClassDef, ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            name = child.name
+            if name.startswith("_"):
+                continue
+            qual = f"{prefix}{name}"
+            doc = ast.get_docstring(child)
+            if not (doc and doc.strip()):
+                bad.append((path, f"public API {qual!r} lacks a docstring"))
+            if isinstance(child, ast.ClassDef):
+                visit(child, qual + ".")
+    visit(tree, "")
+    return bad
+
+
 def main(argv) -> int:
     root = pathlib.Path(argv[1]) if len(argv) > 1 else \
         pathlib.Path(__file__).resolve().parent.parent
@@ -40,6 +69,9 @@ def main(argv) -> int:
         problems.append((src, "src/repro/ does not exist"))
     else:
         problems.extend(missing_docstrings(src))
+        channel = src / "core" / "channel.py"
+        if channel.is_file():
+            problems.extend(undocumented_public_api(channel))
     for path, why in problems:
         print(f"check_docs: {path.relative_to(root)}: {why}")
     if problems:
