@@ -128,6 +128,19 @@ def run(fast: bool = True) -> dict:
     return out
 
 
+def rows_csv(table) -> list:
+    rows = []
+    for name, r in table.items():
+        if name == "workload":
+            continue
+        rows.append(f"serving/{name}/seed,{r['seed_generate']['tok_s']:.1f},"
+                    "tok_s")
+        rows.append(f"serving/{name}/engine,{r['engine']['tok_s']:.1f},"
+                    f"speedup={r['speedup']:.2f}x "
+                    f"p99={r['engine']['p99_s']:.2f}s")
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",

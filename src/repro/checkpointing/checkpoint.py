@@ -39,6 +39,7 @@ def save_pytree(path: str, tree: Any) -> None:
     flat = _flatten(tree)
     arrays, meta = {}, {}
     for i, (key, leaf) in enumerate(sorted(flat.items())):
+        # lint: disable=buffer-alias -- transient: np.savez copies on write
         arr = np.asarray(leaf)
         dtype = str(arr.dtype)
         if arr.dtype == jnp.bfloat16:

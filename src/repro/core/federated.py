@@ -519,7 +519,7 @@ class FederatedRunner:
             rt.weights = (self._agg_weights if spec.n_cohorts == 1
                           else self._agg_weights[rt.slice])
             rt.w_total = float(
-                np.asarray(rt.weights, np.float32).sum(dtype=np.float32))
+                np.array(rt.weights, np.float32).sum(dtype=np.float32))
             up0 = lora.partition(device_params[rt.offset], lora.is_lora_leaf)
             rt.shared = lora.shared_keys(up0, server_lora)
             rt.own = tuple(k for k in sorted(up0) if k not in rt.shared)
@@ -807,7 +807,7 @@ class FederatedRunner:
                 w = mma.sampled_weights(self._mod_counts, ids)
             else:
                 w = jnp.ones((len(ids),)) / len(ids)
-            self._rnd_weights = np.asarray(w, np.float32)
+            self._rnd_weights = np.array(w, np.float32)
             return
         present, ontime = self._faults.round_masks(rnd)
         if ids is not None:
@@ -832,14 +832,14 @@ class FederatedRunner:
             w = contrib.astype(np.float32) / max(int(contrib.sum()), 1)
         self._rnd_present = present
         self._rnd_contrib = contrib
-        self._rnd_weights = np.asarray(w, np.float32)
+        self._rnd_weights = np.array(w, np.float32)
 
     def _active_weights(self) -> np.ndarray:
         """This round's globally-normalized weights as host numpy (the
         fault-masked draw when a schedule is active; static Eq. 13 else)."""
         if self._rnd_weights is not None:
             return self._rnd_weights
-        return np.asarray(self._agg_weights, np.float32)
+        return np.array(self._agg_weights, np.float32)
 
     def _weights_for(self, rt: _Cohort):
         """The weight slice a device phase consumes this round — traced
@@ -900,7 +900,7 @@ class FederatedRunner:
         for rt in self._cohorts:
             n = rt.work_n
             if self._rnd_present is not None:
-                n = int(np.asarray(
+                n = int(np.array(
                     self._rnd_present[rt.work_slice]).sum())
             up += n * rt.uplink_client_bytes
             up_dense += n * rt.dense_client_bytes
@@ -2069,7 +2069,7 @@ class FederatedRunner:
             tr = dict(st["train"])
             for k, v in delivery.items():
                 if k in tr:
-                    tr[k] = np.asarray(v)
+                    tr[k] = np.array(v)
             # dict(st, ...) keeps every other entry key — notably the
             # channel's "chan" error-feedback residual — intact
             self._store.put(j, dict(st, train=tr))
@@ -2106,7 +2106,7 @@ class FederatedRunner:
                     for pos, cid in enumerate(ids):
                         entry = dict(self._store.get(cid))
                         entry["chan"] = jax.tree.map(
-                            lambda a, _p=pos: np.asarray(a[_p]), new_state)
+                            lambda a, _p=pos: np.array(a[_p]), new_state)
                         self._store.put(cid, entry)
                 else:
                     rt.chan_state = new_state
@@ -2271,7 +2271,7 @@ class FederatedRunner:
                 self._prefetch = None
                 pf.close()
             self._srv_q.clear()
-        rnd = int(np.asarray(state["round"]))
+        rnd = int(np.array(state["round"]))
         self._round_idx = rnd
         self._assemble_idx = rnd
         self._rnd_present = self._rnd_contrib = self._rnd_weights = None
@@ -2405,7 +2405,7 @@ class FederatedRunner:
         steps = stack_eval_steps(stacked_eval_batches(
             [self.priv_test[j] for j in js],
             self.spec.cohort_batch_size(rt.idx),
-            self.masks[np.asarray(js)], n_blocks=rt.eval_blocks))
+            self.masks[np.array(js)], n_blocks=rt.eval_blocks))
         m = self._mesh_for(rt.idx)
         if m is not None:
             steps = jax.device_put(steps, shard_part.stacked_eval_shardings(
@@ -2433,7 +2433,7 @@ class FederatedRunner:
                              rt, self._active_locals()[rt.idx])
                          if sampled else rt.eval_steps)
                 sums = rt.client_eval_fn(sp, steps)
-                host = {k: np.asarray(v) for k, v in sums.items()}
+                host = {k: np.array(v) for k, v in sums.items()}
                 out.extend(
                     seccl.metrics_from_sums({k: host[k][i] for k in host})
                     for i in range(rt.work_n))

@@ -350,6 +350,7 @@ class FederationSpec:
 
     @property
     def n_cohorts(self) -> int:
+        """Number of device cohorts in the federation."""
         return len(self.cohorts)
 
     @property
@@ -374,6 +375,7 @@ class FederationSpec:
         raise IndexError(j)
 
     def cohort_rho(self, c: int) -> float:
+        """Cohort ``c``'s MER keep-rate (override or spec default)."""
         return self.cohorts[c].rho if self.cohorts[c].rho is not None \
             else self.rho
 

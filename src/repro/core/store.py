@@ -112,6 +112,7 @@ def _to_host(tree):
     personal state is what a real accelerator's device→host transfer does
     anyway."""
     return jax.tree.map(
+        # lint: disable=buffer-alias -- else-branch leaf is already host numpy
         lambda a: np.array(a) if isinstance(a, jax.Array) else np.asarray(a),
         tree)
 
@@ -180,6 +181,7 @@ class ClientStore:
         return len(self._mem) if self._dir is None else len(self._tmpl)
 
     def ids(self) -> List[int]:
+        """Sorted global ids of every registered client."""
         src = self._mem if self._dir is None else self._tmpl
         return sorted(src)
 

@@ -168,7 +168,7 @@ class ServingEngine:
 
     def submit(self, tokens, max_new: int = 16, frontend_embeds=None,
                prefix_embeds=None) -> int:
-        req = Request(np.asarray(tokens, np.int32).reshape(-1),
+        req = Request(np.array(tokens, np.int32).reshape(-1),
                       min(max_new, self.econf.max_out),
                       frontend_embeds, prefix_embeds)
         req.t_submit = time.perf_counter()
@@ -235,7 +235,7 @@ class ServingEngine:
             if req.max_new <= 1 or tok0 == ec.eos_id:
                 self._free_pages.extend(pages)
                 self._free_slots.append(slot)
-                req.out = np.asarray([tok0], np.int32)
+                req.out = np.array([tok0], np.int32)
                 req.t_done = time.perf_counter()
                 self.finished[req.rid] = req
                 admitted += 1
@@ -276,21 +276,21 @@ class ServingEngine:
 
     def step_once(self):
         """One jitted decode step + host-side collection of finished slots."""
-        prev_active = np.asarray(self.sched["active"])
+        prev_active = np.array(self.sched["active"])
         self.pstate, self.sched = self._step(self.params, self.pstate,
                                              self.sched)
         self.n_steps += 1
-        act = np.asarray(self.sched["active"])
+        act = np.array(self.sched["active"])
         newly = np.nonzero(prev_active & ~act)[0]
         if len(newly):
-            n_out = np.asarray(self.sched["n_out"])
-            rows = np.asarray(self.sched["out_buf"][jnp.asarray(newly)])
+            n_out = np.array(self.sched["n_out"])
+            rows = np.array(self.sched["out_buf"][jnp.asarray(newly)])
             for i, slot in enumerate(newly):
                 self._finish(int(slot), rows[i, :n_out[slot]])
 
     def _finish(self, slot: int, tokens):
         req = self._slot_req.pop(slot)
-        req.out = np.asarray(tokens, np.int32)
+        req.out = np.array(tokens, np.int32)
         req.t_done = time.perf_counter()
         self.finished[req.rid] = req
         self._free_pages.extend(self._slot_pages.pop(slot))

@@ -1,0 +1,306 @@
+"""repro-lint: each invariant rule catches its seeded bug class in a
+scratch repo, blessed idioms pass, suppressions work, and THIS repo is
+clean (the actual CI gate)."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools.lint import lint_root, main, RULES  # noqa: E402
+
+
+def _write(root, rel, text):
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(text))
+    return path
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------- ulp-scale
+def test_ulp_scale_flags_divide_form(tmp_path):
+    _write(tmp_path, "src/repro/kernels/quant.py",
+           "scale = absmax / qmax\n")
+    found = lint_root(tmp_path, ["ulp-scale"])
+    assert _rules(found) == {"ulp-scale"}
+    assert found[0].line == 1
+
+
+def test_ulp_scale_gates_channel_too(tmp_path):
+    _write(tmp_path, "src/repro/core/channel.py",
+           "s = jnp.max(jnp.abs(x)) / q_max\n")
+    assert _rules(lint_root(tmp_path, ["ulp-scale"])) == {"ulp-scale"}
+
+
+def test_ulp_scale_blesses_multiply_form(tmp_path):
+    _write(tmp_path, "src/repro/kernels/quant.py", """\
+        inv = jnp.float32(1.0 / qmax)
+        scale = absmax * inv
+        other = x / rows
+        """)
+    assert lint_root(tmp_path, ["ulp-scale"]) == []
+
+
+# ------------------------------------------------------------- buffer-alias
+def test_buffer_alias_flags_asarray(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        import numpy as np
+        host = np.asarray(device_value)
+        """)
+    found = lint_root(tmp_path, ["buffer-alias"])
+    assert _rules(found) == {"buffer-alias"}
+    assert found[0].line == 2
+
+
+def test_buffer_alias_gates_checkpointing_glob(tmp_path):
+    _write(tmp_path, "src/repro/checkpointing/checkpoint.py",
+           "import numpy as np\narr = np.asarray(leaf)\n")
+    assert _rules(lint_root(tmp_path, ["buffer-alias"])) == {"buffer-alias"}
+
+
+def test_buffer_alias_blesses_copy_and_other_modules(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py",
+           "import numpy as np\nhost = np.array(device_value)\n")
+    # asarray OUTSIDE the gated host-state modules is fine
+    _write(tmp_path, "src/repro/core/ccl.py",
+           "import numpy as np\nx = np.asarray(y)\n")
+    assert lint_root(tmp_path, ["buffer-alias"]) == []
+
+
+# ------------------------------------------------------------ jit-shape-data
+def test_jit_shape_data_flags_branch_on_traced(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    found = lint_root(tmp_path, ["jit-shape-data"])
+    assert _rules(found) == {"jit-shape-data"}
+
+
+def test_jit_shape_data_flags_coercion_and_item(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import jax
+
+        def step(x):
+            n = int(x)
+            v = x.item()
+            return n + v
+
+        step_j = jax.jit(step)
+        """)
+    found = lint_root(tmp_path, ["jit-shape-data"])
+    assert len(found) == 2 and _rules(found) == {"jit-shape-data"}
+
+
+def test_jit_shape_data_exempts_static_shape_and_none(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("n",))
+        def step(x, n, ref=None):
+            if n > 2:                      # static arg: fine
+                x = x * n
+            if x.shape[0] > 1:             # shape: static under trace
+                x = x + 1
+            if ref is not None:            # structural pytree check
+                x = x - ref
+            m = int(x.shape[0])            # shape coercion: fine
+            return x, m
+        """)
+    assert lint_root(tmp_path, ["jit-shape-data"]) == []
+
+
+# ------------------------------------------------------------- kernel-triple
+_PALLAS_KERNEL = """\
+    import jax
+    from jax.experimental import pallas as pl
+
+    def _kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def foo(x):
+        return pl.pallas_call(_kern, out_shape=x)(x)
+    """
+
+
+def test_kernel_triple_flags_orphan_kernel(tmp_path):
+    _write(tmp_path, "src/repro/kernels/foo.py", _PALLAS_KERNEL)
+    found = lint_root(tmp_path, ["kernel-triple"])
+    assert _rules(found) == {"kernel-triple"}
+    msgs = " ".join(f.message for f in found)
+    assert "ops.py" in msgs and "_ref oracle" in msgs
+
+
+def test_kernel_triple_requires_oracle_test(tmp_path):
+    _write(tmp_path, "src/repro/kernels/foo.py", _PALLAS_KERNEL)
+    _write(tmp_path, "src/repro/kernels/ops.py",
+           "from repro.kernels.foo import foo\n")
+    _write(tmp_path, "src/repro/kernels/ref.py",
+           'def foo_ref(x):\n    """Oracle."""\n    return x\n')
+    found = lint_root(tmp_path, ["kernel-triple"])
+    assert len(found) == 1 and "no test" in found[0].message
+
+
+def test_kernel_triple_satisfied_by_full_triple(tmp_path):
+    _write(tmp_path, "src/repro/kernels/foo.py", _PALLAS_KERNEL)
+    _write(tmp_path, "src/repro/kernels/ops.py",
+           "from repro.kernels.foo import foo\n")
+    _write(tmp_path, "src/repro/kernels/ref.py",
+           'def foo_ref(x):\n    """Oracle."""\n    return x\n')
+    _write(tmp_path, "tests/test_foo.py",
+           "from repro.kernels.ref import foo_ref\n")
+    assert lint_root(tmp_path, ["kernel-triple"]) == []
+
+
+def test_kernel_triple_ignores_non_pallas_modules(tmp_path):
+    _write(tmp_path, "src/repro/kernels/util.py",
+           "def helper(x):\n    return x\n")
+    assert lint_root(tmp_path, ["kernel-triple"]) == []
+
+
+# ----------------------------------------------------------- schedule-purity
+def test_schedule_purity_flags_jax_in_faults(tmp_path):
+    _write(tmp_path, "src/repro/core/faults.py", """\
+        import numpy as np
+        import jax.numpy as jnp
+
+        def draw(seed, rnd):
+            return jnp.zeros(3)
+        """)
+    found = lint_root(tmp_path, ["schedule-purity"])
+    assert _rules(found) == {"schedule-purity"}
+
+
+def test_schedule_purity_scopes_store_to_schedule_class(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        import jax
+        import numpy as np
+
+        class ParticipantSchedule:
+            def round_ids(self, rnd):
+                return jax.numpy.arange(3)
+
+        class ClientStore:
+            def gather(self, ids):
+                return jax.tree.map(np.stack, ids)
+        """)
+    found = lint_root(tmp_path, ["schedule-purity"])
+    assert _rules(found) == {"schedule-purity"}
+    # only the schedule class's jax use is flagged, not ClientStore's
+    assert all(f.line == 6 for f in found)
+
+
+def test_schedule_purity_blesses_numpy_only(tmp_path):
+    _write(tmp_path, "src/repro/core/faults.py", """\
+        import numpy as np
+
+        def draw(seed, rnd):
+            return np.random.default_rng([seed, rnd]).random(3)
+        """)
+    assert lint_root(tmp_path, ["schedule-purity"]) == []
+
+
+# ------------------------------------------------------------ bench-registry
+_RUNNABLE = 'def main():\n    pass\n\nif __name__ == "__main__":\n' \
+            "    main()\n"
+
+
+def test_bench_registry_flags_unregistered(tmp_path):
+    _write(tmp_path, "benchmarks/foo.py", _RUNNABLE)
+    _write(tmp_path, "benchmarks/run.py",
+           '_MODULES = {"bar": "bar"}\nEXCLUDED = {"run"}\n' + _RUNNABLE)
+    found = lint_root(tmp_path, ["bench-registry"])
+    assert _rules(found) == {"bench-registry"}
+    assert found[0].rel == "benchmarks/foo.py"
+
+
+def test_bench_registry_accepts_registered_and_excluded(tmp_path):
+    _write(tmp_path, "benchmarks/foo.py", _RUNNABLE)
+    _write(tmp_path, "benchmarks/common.py", _RUNNABLE)
+    _write(tmp_path, "benchmarks/util.py", "X = 1\n")  # not runnable
+    _write(tmp_path, "benchmarks/run.py",
+           '_MODULES = {"foo": "foo"}\nEXCLUDED = {"run", "common"}\n'
+           + _RUNNABLE)
+    assert lint_root(tmp_path, ["bench-registry"]) == []
+
+
+# -------------------------------------------------------------- suppressions
+def test_suppression_trailing_comment(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        import numpy as np
+        h = np.asarray(v)  # lint: disable=buffer-alias -- transient
+        """)
+    assert lint_root(tmp_path, ["buffer-alias"]) == []
+
+
+def test_suppression_comment_above(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        import numpy as np
+        # lint: disable=buffer-alias -- provably host-side already
+        h = np.asarray(v)
+        """)
+    assert lint_root(tmp_path, ["buffer-alias"]) == []
+
+
+def test_suppression_file_level(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        # lint: disable-file=buffer-alias
+        import numpy as np
+        a = np.asarray(v)
+        b = np.asarray(w)
+        """)
+    assert lint_root(tmp_path, ["buffer-alias"]) == []
+
+
+def test_suppression_is_per_rule(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        import numpy as np
+        h = np.asarray(v)  # lint: disable=ulp-scale -- wrong rule id
+        """)
+    assert _rules(lint_root(tmp_path, ["buffer-alias"])) == {"buffer-alias"}
+
+
+def test_suppression_in_string_literal_does_not_count(tmp_path):
+    _write(tmp_path, "src/repro/core/store.py", """\
+        import numpy as np
+        s = "# lint: disable-file=buffer-alias"
+        h = np.asarray(v)
+        """)
+    assert _rules(lint_root(tmp_path, ["buffer-alias"])) == {"buffer-alias"}
+
+
+# ------------------------------------------------------------------ CLI/meta
+def test_cli_exit_codes(tmp_path, capsys):
+    _write(tmp_path, "src/repro/kernels/quant.py",
+           "scale = absmax / qmax\n")
+    assert main([str(tmp_path), "--rules", "ulp-scale"]) == 1
+    out = capsys.readouterr().out
+    assert "[ulp-scale]" in out and "FAILED" in out
+    assert main([str(tmp_path), "--rules", "no-such-rule"]) == 1
+    assert main(["--list"]) == 0
+
+
+def test_every_rule_has_id_and_rationale():
+    ids = [r.id for r in RULES]
+    assert len(ids) == len(set(ids)) and all(ids)
+    assert all(r.rationale for r in RULES)
+
+
+def test_this_repo_is_clean():
+    """The actual gate CI runs — the whole repo must lint clean."""
+    out = subprocess.run(
+        [sys.executable, "-m", "tools.lint", str(ROOT)],
+        capture_output=True, text=True, cwd=str(ROOT))
+    assert out.returncode == 0, out.stdout + out.stderr

@@ -1,0 +1,3 @@
+"""Repo tooling: static analysis (``tools.lint``) and its legacy
+``check_docs`` shim.  Everything here is pure stdlib so CI can run it
+before any dependency install."""

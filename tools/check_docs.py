@@ -1,81 +1,45 @@
-"""Docs gate for CI: README.md must exist, every module under
-``src/repro/**/*.py`` must carry a non-empty module docstring, and the
-wire-format contract (``src/repro/core/channel.py``) must document its
-entire public API — every public class, function and method (the channel
-is the single cross-architecture contract, so an undocumented codec knob
-is a correctness hazard, not a style nit).
+"""Compatibility shim: the docs gate is now part of ``tools.lint``.
 
-Pure stdlib (ast), no repo imports — safe to run before dependencies are
-installed.  Exit status 0 when clean, 1 with a findings list otherwise.
+The original standalone checker (README + module docstrings + the
+channel public-API gate) was folded into the unified AST invariant
+checker as the ``readme-exists`` / ``module-docstring`` /
+``public-api-docs`` rules.  This shim keeps the old entry point and the
+two helper functions alive for existing callers and tests:
 
-  python tools/check_docs.py [repo_root]
+  python tools/check_docs.py [repo_root]   # runs the docs rules only
+
+New code should run the full gate instead:
+
+  python -m tools.lint [repo_root]
 """
 from __future__ import annotations
 
-import ast
 import pathlib
 import sys
 
+# the shim lives at <root>/tools/check_docs.py and may be imported with
+# only tools/ on sys.path (the legacy test harness does exactly that),
+# so make the repo root importable before reaching for the package
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
 
-def missing_docstrings(src_root: pathlib.Path) -> list:
-    """Paths under ``src_root`` whose module docstring is absent/empty/
-    unparseable."""
-    bad = []
-    for path in sorted(src_root.rglob("*.py")):
-        try:
-            doc = ast.get_docstring(ast.parse(
-                path.read_text(encoding="utf-8")))
-        except (SyntaxError, UnicodeDecodeError) as e:
-            bad.append((path, f"unparseable: {e}"))
-            continue
-        if not (doc and doc.strip()):
-            bad.append((path, "missing module docstring"))
-    return bad
+from tools.lint import lint_root  # noqa: E402
+from tools.lint.rules_docs import (  # noqa: E402,F401 (re-export)
+    missing_docstrings, undocumented_public_api)
 
-
-def undocumented_public_api(path: pathlib.Path) -> list:
-    """Public (non-underscore) classes / functions / methods in ``path``
-    that lack a docstring.  Dunder methods and dataclass field blocks are
-    exempt — only callables a user would reach for are gated."""
-    tree = ast.parse(path.read_text(encoding="utf-8"))
-    bad = []
-
-    def visit(node, prefix):
-        for child in ast.iter_child_nodes(node):
-            if not isinstance(child, (ast.ClassDef, ast.FunctionDef,
-                                      ast.AsyncFunctionDef)):
-                continue
-            name = child.name
-            if name.startswith("_"):
-                continue
-            qual = f"{prefix}{name}"
-            doc = ast.get_docstring(child)
-            if not (doc and doc.strip()):
-                bad.append((path, f"public API {qual!r} lacks a docstring"))
-            if isinstance(child, ast.ClassDef):
-                visit(child, qual + ".")
-    visit(tree, "")
-    return bad
+#: the subset of the lint registry this gate has always covered
+DOCS_RULES = ("readme-exists", "module-docstring", "public-api-docs")
 
 
 def main(argv) -> int:
-    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
-        pathlib.Path(__file__).resolve().parent.parent
-    problems = []
-    if not (root / "README.md").is_file():
-        problems.append((root / "README.md", "README.md does not exist"))
-    src = root / "src" / "repro"
-    if not src.is_dir():
-        problems.append((src, "src/repro/ does not exist"))
-    else:
-        problems.extend(missing_docstrings(src))
-        channel = src / "core" / "channel.py"
-        if channel.is_file():
-            problems.extend(undocumented_public_api(channel))
-    for path, why in problems:
-        print(f"check_docs: {path.relative_to(root)}: {why}")
-    if problems:
-        print(f"check_docs: FAILED ({len(problems)} problem(s))")
+    """Legacy CLI: ``check_docs [repo_root]`` — docs rules only."""
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else _ROOT
+    findings = lint_root(root, DOCS_RULES)
+    for f in findings:
+        print(f"check_docs: {f.render()}")
+    if findings:
+        print(f"check_docs: FAILED ({len(findings)} problem(s))")
         return 1
     print("check_docs: OK")
     return 0

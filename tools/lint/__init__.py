@@ -1,0 +1,107 @@
+"""repro-lint — the repo's AST invariant checker.
+
+Nine PRs of engine/kernel/channel work produced a catalog of hard-won
+invariants that previously lived only in commit messages: this package
+encodes them as enforceable lint.  Pure stdlib (``ast``), no repo
+imports, so CI runs it before any dependency install:
+
+    python -m tools.lint [repo_root]          # exit 0 clean, 1 findings
+    python -m tools.lint --list               # rule catalog
+    python -m tools.lint --rules ulp-scale    # subset
+
+Each rule is a small AST visitor with an id, a rationale docstring naming
+the PR/bug class that motivated it, and per-line
+(``# lint: disable=RULE-ID — why``) / per-file
+(``# lint: disable-file=RULE-ID``) suppression.  The rule catalog lives
+in :data:`RULES`; see ``docs/architecture.md`` ("Static analysis /
+invariant catalog") for the prose version.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional, Sequence
+
+from tools.lint.core import (Finding, Repo, Rule,  # noqa: F401 (re-export)
+                             apply_suppressions)
+from tools.lint.rules_docs import (ModuleDocstringRule, PublicApiDocsRule,
+                                   ReadmeExistsRule)
+from tools.lint.rules_invariants import (BufferAliasRule, JitShapeDataRule,
+                                         SchedulePurityRule, UlpScaleRule)
+from tools.lint.rules_structure import BenchRegistryRule, KernelTripleRule
+
+#: the rule registry, in report order
+RULES: List[Rule] = [
+    UlpScaleRule(),
+    BufferAliasRule(),
+    JitShapeDataRule(),
+    KernelTripleRule(),
+    SchedulePurityRule(),
+    BenchRegistryRule(),
+    ReadmeExistsRule(),
+    ModuleDocstringRule(),
+    PublicApiDocsRule(),
+]
+
+
+def lint_root(root, rule_ids: Optional[Sequence[str]] = None
+              ) -> List[Finding]:
+    """Run the registry (or the ``rule_ids`` subset) over ``root`` and
+    return surviving findings, suppressions applied, sorted by
+    location."""
+    repo = Repo(root)
+    wanted = set(rule_ids) if rule_ids else None
+    findings: List[Finding] = []
+    for rule in RULES:
+        if wanted is not None and rule.id not in wanted:
+            continue
+        findings.extend(rule.check(repo))
+    findings = apply_suppressions(repo, findings)
+    return sorted(findings, key=lambda f: (f.rel, f.line, f.rule))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(
+        prog="tools.lint",
+        description="repro-lint: AST invariant checker for this repo")
+    ap.add_argument("root", nargs="?", default=None,
+                    help="repo root (default: two levels above this file)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule-id subset")
+    ap.add_argument("--list", action="store_true", dest="list_rules",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.id}: {rule.rationale}")
+        return 0
+
+    root = pathlib.Path(args.root) if args.root else \
+        pathlib.Path(__file__).resolve().parent.parent.parent
+    if not root.is_dir():
+        print(f"lint: {root}: not a directory")
+        return 1
+    rule_ids = ([r.strip() for r in args.rules.split(",") if r.strip()]
+                if args.rules else None)
+    if rule_ids:
+        known = {r.id for r in RULES}
+        unknown = [r for r in rule_ids if r not in known]
+        if unknown:
+            print(f"lint: unknown rule id(s): {', '.join(unknown)}")
+            return 1
+    findings = lint_root(root, rule_ids)
+    for f in findings:
+        print(f"lint: {f.render()}")
+    if findings:
+        print(f"lint: FAILED ({len(findings)} finding(s))")
+        return 1
+    n_rules = len(rule_ids) if rule_ids else len(RULES)
+    print(f"lint: OK ({n_rules} rule(s))")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__.py
+    sys.exit(main())

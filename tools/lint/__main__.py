@@ -1,0 +1,7 @@
+"""``python -m tools.lint`` — run the invariant checker (see
+:mod:`tools.lint`)."""
+import sys
+
+from tools.lint import main
+
+sys.exit(main())

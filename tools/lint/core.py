@@ -1,0 +1,163 @@
+"""repro-lint core: parsed-file cache, suppression comments, rule base.
+
+The linter encodes this codebase's *contract rules* — invariants that were
+each fixed by hand in an earlier PR and must not regress — as small AST
+visitors over a shared parse cache.  Everything is pure stdlib (``ast`` +
+``tokenize``), no repo imports, so the gate runs before dependencies are
+installed.
+
+Suppression syntax (parsed from real COMMENT tokens, so occurrences
+inside string literals don't count):
+
+* ``# lint: disable=RULE-ID`` trailing the flagged statement's first
+  line, or on its own line directly above it, suppresses that finding.
+  Multiple ids separated by commas; anything after the id list
+  (`` -- justification``) is the required human-readable reason.
+* ``# lint: disable-file=RULE-ID`` anywhere in a file (conventionally
+  near the top) suppresses the rule for the whole file.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: ``rel`` path (repo-relative, posix), 1-based
+    ``line`` (0 = whole-file finding) and a human-readable message."""
+
+    rule: str
+    rel: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        """``path:line: [rule-id] message`` (the CI log line)."""
+        loc = f"{self.rel}:{self.line}" if self.line else self.rel
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+_SUPPRESS_RE = re.compile(
+    r"lint:\s*(disable|disable-file)\s*=\s*([A-Za-z0-9_,\- ]+)")
+
+
+def _parse_suppressions(text: str) -> Tuple[Dict[int, Set[str]], Set[str]]:
+    """(line -> rule ids, whole-file rule ids) from comment tokens."""
+    per_line: Dict[int, Set[str]] = {}
+    whole_file: Set[str] = set()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            # id list ends at the first non-id token, so a trailing
+            # "-- justification" never parses as a rule id
+            ids = {part.strip().split()[0]
+                   for part in m.group(2).split(",") if part.strip()}
+            if m.group(1) == "disable-file":
+                whole_file |= ids
+            else:
+                per_line.setdefault(tok.start[0], set()).update(ids)
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass
+    return per_line, whole_file
+
+
+class ParsedFile:
+    """One source file: text, AST (``None`` on syntax error) and its
+    suppression table."""
+
+    def __init__(self, path: pathlib.Path, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree: Optional[ast.AST] = ast.parse(text)
+        except (SyntaxError, ValueError) as e:
+            self.tree = None
+            self.parse_error = str(e)
+        self.line_disable, self.file_disable = _parse_suppressions(text)
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        """True when ``rule_id`` is disabled for ``line`` — by a trailing
+        comment on that line, a comment on the line directly above, or a
+        file-level disable."""
+        if rule_id in self.file_disable:
+            return True
+        return (rule_id in self.line_disable.get(line, ())
+                or rule_id in self.line_disable.get(line - 1, ()))
+
+
+class Repo:
+    """Parse-once view of the repo tree rules run against."""
+
+    def __init__(self, root):
+        self.root = pathlib.Path(root).resolve()
+        self._cache: Dict[str, Optional[ParsedFile]] = {}
+
+    def file(self, rel: str) -> Optional[ParsedFile]:
+        """The parsed file at repo-relative ``rel`` (None if absent)."""
+        rel = str(pathlib.PurePosixPath(rel))
+        if rel not in self._cache:
+            path = self.root / rel
+            if not path.is_file():
+                self._cache[rel] = None
+            else:
+                try:
+                    text = path.read_text(encoding="utf-8")
+                except (OSError, UnicodeDecodeError):
+                    self._cache[rel] = None
+                    return None
+                self._cache[rel] = ParsedFile(path, rel, text)
+        return self._cache[rel]
+
+    def glob(self, pattern: str) -> List[ParsedFile]:
+        """Parsed ``.py`` files matching a repo-relative glob, sorted."""
+        out = []
+        for path in sorted(self.root.glob(pattern)):
+            if not (path.is_file() and path.suffix == ".py"):
+                continue
+            pf = self.file(path.relative_to(self.root).as_posix())
+            if pf is not None:
+                out.append(pf)
+        return out
+
+
+class Rule:
+    """Base class: subclasses set ``id``, write the *rationale* (which PR
+    / bug class motivates the rule) as the class docstring, and yield
+    :class:`Finding`s from :meth:`check`."""
+
+    id: str = ""
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Yield findings over ``repo`` (suppressions filtered later)."""
+        raise NotImplementedError
+
+    @property
+    def rationale(self) -> str:
+        """One-line rationale (first line of the rule's docstring)."""
+        doc = (self.__doc__ or "").strip()
+        return doc.splitlines()[0] if doc else ""
+
+
+def apply_suppressions(repo: Repo, findings: Iterable[Finding]
+                       ) -> List[Finding]:
+    """Drop findings whose line/file carries a matching disable comment."""
+    kept = []
+    for f in findings:
+        pf = repo.file(f.rel)
+        if pf is not None and pf.suppressed(f.rule, f.line):
+            continue
+        kept.append(f)
+    return kept

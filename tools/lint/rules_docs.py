@@ -1,0 +1,137 @@
+"""Documentation rules — the old ``tools/check_docs.py`` gate folded into
+the unified linter.
+
+``readme-exists`` / ``module-docstring`` are the original CI docs gate;
+``public-api-docs`` extends the per-callable gate from the wire-format
+contract (``core/channel.py``) to the other two user-facing contract
+surfaces: ``core/spec.py`` (FederationSpec / ClientCohort / FaultSpec /
+ParticipantSampler) and ``core/store.py`` (ClientStore /
+ParticipantSchedule).  An undocumented knob on any of these is a
+correctness hazard, not a style nit — they are the surfaces users program
+against.
+
+``missing_docstrings`` / ``undocumented_public_api`` keep the exact
+return shape of the original ``check_docs`` helpers (lists of
+``(path, reason)`` tuples) because the compatibility shim re-exports
+them.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable, List, Tuple
+
+from tools.lint.core import Finding, Repo, Rule
+
+# the user-facing contract surfaces whose whole public API is docstring-
+# gated (repo-relative); module docstrings are gated everywhere under src/
+API_GATED_FILES = (
+    "src/repro/core/channel.py",
+    "src/repro/core/spec.py",
+    "src/repro/core/store.py",
+)
+
+
+def missing_docstrings(src_root: pathlib.Path) -> List[Tuple]:
+    """Paths under ``src_root`` whose module docstring is absent/empty/
+    unparseable."""
+    bad = []
+    for path in sorted(src_root.rglob("*.py")):
+        try:
+            doc = ast.get_docstring(ast.parse(
+                path.read_text(encoding="utf-8")))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            bad.append((path, f"unparseable: {e}"))
+            continue
+        if not (doc and doc.strip()):
+            bad.append((path, "missing module docstring"))
+    return bad
+
+
+def _undocumented_api(tree: ast.AST) -> List[Tuple[int, str]]:
+    """(lineno, qualname) of public classes/functions/methods lacking a
+    docstring.  Dunder/underscore names are exempt — only callables a
+    user would reach for are gated."""
+    bad: List[Tuple[int, str]] = []
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.ClassDef, ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            if child.name.startswith("_"):
+                continue
+            qual = f"{prefix}{child.name}"
+            doc = ast.get_docstring(child)
+            if not (doc and doc.strip()):
+                bad.append((child.lineno, qual))
+            if isinstance(child, ast.ClassDef):
+                visit(child, qual + ".")
+
+    visit(tree, "")
+    return bad
+
+
+def undocumented_public_api(path: pathlib.Path) -> List[Tuple]:
+    """Public classes/functions/methods in ``path`` lacking a docstring,
+    as ``(path, reason)`` tuples (the legacy ``check_docs`` shape)."""
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    return [(path, f"public API {qual!r} lacks a docstring")
+            for _, qual in _undocumented_api(tree)]
+
+
+class ReadmeExistsRule(Rule):
+    """README.md must exist at the repo root (the original docs gate)."""
+
+    id = "readme-exists"
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag a missing repo-root README.md."""
+        if not (repo.root / "README.md").is_file():
+            yield Finding(self.id, "README.md", 0,
+                          "README.md does not exist")
+
+
+class ModuleDocstringRule(Rule):
+    """Every module under src/repro/ carries a non-empty module docstring
+    (the original docs gate: an undocumented module is invisible to the
+    next session)."""
+
+    id = "module-docstring"
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag src/repro modules without a module docstring."""
+        src = repo.root / "src" / "repro"
+        if not src.is_dir():
+            yield Finding(self.id, "src/repro", 0,
+                          "src/repro/ does not exist")
+            return
+        for pf in repo.glob("src/repro/**/*.py"):
+            if pf.tree is None:
+                yield Finding(self.id, pf.rel, 1,
+                              f"unparseable: {pf.parse_error}")
+                continue
+            doc = ast.get_docstring(pf.tree)
+            if not (doc and doc.strip()):
+                yield Finding(self.id, pf.rel, 1,
+                              "missing module docstring")
+
+
+class PublicApiDocsRule(Rule):
+    """The user-facing contract surfaces (channel, spec, store) must
+    document their ENTIRE public API — every public class, function and
+    method (extends the PR 9 channel gate to the other two contract
+    files)."""
+
+    id = "public-api-docs"
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag undocumented public callables in the gated contract
+        files."""
+        for rel in API_GATED_FILES:
+            pf = repo.file(rel)
+            if pf is None or pf.tree is None:
+                continue
+            for lineno, qual in _undocumented_api(pf.tree):
+                yield Finding(self.id, pf.rel, lineno,
+                              f"public API {qual!r} lacks a docstring")

@@ -1,0 +1,320 @@
+"""Invariant rules — each encodes a bug class an earlier PR fixed by hand.
+
+* ``ulp-scale`` (PR 9): quantizer scales must be computed in multiply
+  form, never divide form.
+* ``buffer-alias`` (PR 8): ``np.asarray`` on possibly-jax values in
+  host-state modules silently aliases CPU device buffers.
+* ``jit-shape-data`` (PRs 7-9): jitted round functions must treat
+  membership/codec/fault state as traced DATA — no host coercions, no
+  Python branching on traced arguments.
+* ``schedule-purity`` (PRs 7-8): stateless host-side replay must stay
+  numpy-only.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.lint.core import Finding, ParsedFile, Repo, Rule
+
+_QMAX_NAME = re.compile(r"^q_?max$", re.IGNORECASE)
+
+
+def _name_of(node: ast.AST) -> str:
+    """Identifier of a Name/Attribute node ('' otherwise)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ""
+
+
+class UlpScaleRule(Rule):
+    """Quantizer scales must use the multiply form
+    ``absmax * (1.0 / qmax)`` — PR 9 found the divide form
+    ``absmax / qmax`` lands one ULP away from itself across eager / jit /
+    Pallas-interpret lowerings (XLA strength-reduces division by a
+    constant in some contexts but not others), breaking the bitwise
+    kernel/twin/oracle pin.  Applies to the kernel tree and the wire
+    contract; a *constant* numerator (``1.0 / qmax``, the reciprocal the
+    multiply form needs) is the blessed idiom and passes."""
+
+    id = "ulp-scale"
+    PATHS = ("src/repro/kernels/*.py", "src/repro/core/channel.py")
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag ``<expr> / qmax``-form divisions in the gated modules."""
+        files = list(repo.glob(self.PATHS[0]))
+        chan = repo.file(self.PATHS[1])
+        if chan is not None:
+            files.append(chan)
+        for pf in files:
+            if pf.tree is None:
+                continue
+            for node in ast.walk(pf.tree):
+                if not (isinstance(node, ast.BinOp)
+                        and isinstance(node.op, ast.Div)):
+                    continue
+                if not _QMAX_NAME.match(_name_of(node.right)):
+                    continue
+                if isinstance(node.left, ast.Constant) and isinstance(
+                        node.left.value, (int, float)):
+                    continue            # 1.0 / qmax — the reciprocal itself
+                yield Finding(
+                    self.id, pf.rel, node.lineno,
+                    "divide-form scale ('x / qmax'): compute the "
+                    "reciprocal once and multiply ('x * (1.0 / qmax)') — "
+                    "the divide form is one ULP off across "
+                    "eager/jit/Pallas lowerings (PR 9)")
+
+
+class BufferAliasRule(Rule):
+    """``np.asarray(...)`` in host-state modules may ALIAS a CPU jax
+    buffer instead of copying — PR 8 found a view-holding ClientStore
+    pinned every registered client's device array for the life of the
+    run, silently scaling device memory with N.  In the gated modules
+    (store, engine host paths, checkpointing) use ``np.array(...)``
+    (which copies) or suppress with a one-line justification for
+    provably-transient uses."""
+
+    id = "buffer-alias"
+    PATHS = (
+        "src/repro/core/store.py",
+        "src/repro/core/federated.py",
+        "src/repro/launch/serve_engine.py",
+        "src/repro/checkpointing/*.py",
+    )
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag ``np.asarray`` / ``numpy.asarray`` calls in the gated
+        host-state modules."""
+        files: List[ParsedFile] = []
+        for pat in self.PATHS:
+            files.extend(repo.glob(pat) if "*" in pat
+                         else filter(None, [repo.file(pat)]))
+        for pf in files:
+            if pf.tree is None:
+                continue
+            for node in ast.walk(pf.tree):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "asarray"
+                        and isinstance(node.func.value, ast.Name)
+                        and node.func.value.id in ("np", "numpy")):
+                    continue
+                yield Finding(
+                    self.id, pf.rel, node.lineno,
+                    "np.asarray may alias a CPU jax buffer and pin device "
+                    "memory (PR 8); use np.array(...) (copies) or "
+                    "suppress with a justification")
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    """True for an expression that IS jax.jit (``jax.jit`` / bare
+    ``jit``)."""
+    return _name_of(node) == "jit"
+
+
+def _static_argnames(keywords) -> Set[str]:
+    """The static_argnames of a jit/partial call as a name set."""
+    out: Set[str] = set()
+    for kw in keywords or ():
+        if kw.arg not in ("static_argnames", "static_argnums"):
+            continue
+        v = kw.value
+        elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+    return out
+
+
+def _jit_entries(tree: ast.AST) -> Dict[str, Set[str]]:
+    """Function names entering ``jax.jit`` in this module (by decorator
+    or by being passed as the first argument), mapped to the union of
+    their static_argnames."""
+    entries: Dict[str, Set[str]] = {}
+
+    def add(name: str, statics: Set[str]):
+        entries.setdefault(name, set()).update(statics)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_ref(node.func):
+            if node.args:
+                target = _name_of(node.args[0])
+                if target:
+                    add(target, _static_argnames(node.keywords))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jit_ref(dec):
+                    add(node.name, set())
+                elif isinstance(dec, ast.Call):
+                    if _is_jit_ref(dec.func):
+                        add(node.name, _static_argnames(dec.keywords))
+                    elif (_name_of(dec.func) == "partial" and dec.args
+                          and _is_jit_ref(dec.args[0])):
+                        add(node.name, _static_argnames(dec.keywords))
+    return entries
+
+
+def _mentions(node: ast.AST, names: Set[str]) -> bool:
+    """True when a bare Name in ``names`` occurs anywhere under
+    ``node``."""
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(node))
+
+
+def _shape_like(node: ast.AST) -> bool:
+    """True when the expression reads static metadata (``.shape`` /
+    ``.ndim`` / ``.size`` / ``len(...)``) — static under trace, so host
+    coercions and branching on it are fine."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "size"):
+            return True
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "len"):
+            return True
+    return False
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — a structural pytree check,
+    the standard jax idiom for optional traced inputs (changing
+    None-ness changes the trace signature on purpose)."""
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops)
+            and all(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators))
+
+
+def _mentions_traced(node: ast.AST, names: Set[str]) -> bool:
+    """Like :func:`_mentions` but skips ``is [not] None`` subtrees, so a
+    test like ``flag > 0 and x is not None`` only counts ``flag``."""
+    if _is_none_check(node):
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in names
+    return any(_mentions_traced(child, names)
+               for child in ast.iter_child_nodes(node))
+
+
+class JitShapeDataRule(Rule):
+    """Inside functions that enter ``jax.jit``, per-round state must be
+    DATA, never shape (PRs 7-9: fault masks, sampling membership and
+    codec state all enter jit as data so no round retraces after
+    warm-up).  Host coercions (``int()``/``float()``/``bool()`` of
+    traced values, ``.item()``) force a device sync and Python-level
+    ``if``/``while`` on traced arguments bakes the branch into the trace
+    — both recompile or desync when the value changes.  Static metadata
+    (``.shape``/``len``), static_argnames and ``is None`` structure
+    checks are exempt."""
+
+    id = "jit-shape-data"
+    COERCIONS = ("int", "float", "bool")
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag host syncs and traced-value branching in jitted
+        functions under src/repro."""
+        for pf in repo.glob("src/repro/**/*.py"):
+            if pf.tree is None:
+                continue
+            entries = _jit_entries(pf.tree)
+            if not entries:
+                continue
+            for node in ast.walk(pf.tree):
+                if (isinstance(node, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef))
+                        and node.name in entries):
+                    yield from self._check_fn(pf, node, entries[node.name])
+
+    def _check_fn(self, pf: ParsedFile, fn, statics: Set[str]
+                  ) -> Iterable[Finding]:
+        a = fn.args
+        params = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        traced = {p for p in params if p not in statics and p != "self"}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args):
+                    yield Finding(
+                        self.id, pf.rel, node.lineno,
+                        f".item() inside jitted {fn.name!r} forces a "
+                        "host sync (and a retrace per value if used for "
+                        "control flow)")
+                    continue
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in self.COERCIONS
+                        and len(node.args) == 1
+                        and _mentions(node.args[0], traced)
+                        and not _shape_like(node.args[0])):
+                    yield Finding(
+                        self.id, pf.rel, node.lineno,
+                        f"{node.func.id}() of traced value inside jitted "
+                        f"{fn.name!r}: host-sync + recompilation hazard — "
+                        "keep it as array data (or mark the argument "
+                        "static)")
+            elif isinstance(node, (ast.If, ast.IfExp, ast.While)):
+                test = node.test
+                if _mentions_traced(test, traced) and not _shape_like(test):
+                    kind = type(node).__name__.lower()
+                    yield Finding(
+                        self.id, pf.rel, test.lineno,
+                        f"Python {kind} on traced argument inside jitted "
+                        f"{fn.name!r}: the branch is baked into the trace "
+                        "— use jnp.where/lax.cond, or mark the argument "
+                        "static")
+
+
+class SchedulePurityRule(Rule):
+    """Host-side stateless replay must be numpy-only (PRs 7-8): fault
+    and participant schedules are pure functions of ``(seed, round)``
+    replayed independently by the main thread, the overlap prefetch
+    worker and checkpoint resume — pulling jax into that math would tie
+    replay determinism to backend/tracing context and break bit-identical
+    resume.  ``core/faults.py`` is gated as a whole module;
+    in ``core/store.py`` the ``ParticipantSchedule`` class is gated
+    (ClientStore legitimately moves jax arrays)."""
+
+    id = "schedule-purity"
+    MODULE_SCOPED = ("src/repro/core/faults.py",)
+    CLASS_SCOPED = {"src/repro/core/store.py": ("ParticipantSchedule",)}
+
+    def _jax_refs(self, node: ast.AST) -> Iterable:
+        """(lineno, description) of jax imports/uses under ``node``."""
+        for n in ast.walk(node):
+            if isinstance(n, ast.Import):
+                for alias in n.names:
+                    if alias.name.split(".")[0] == "jax":
+                        yield n.lineno, f"import {alias.name}"
+            elif isinstance(n, ast.ImportFrom):
+                if (n.module or "").split(".")[0] == "jax":
+                    yield n.lineno, f"from {n.module} import ..."
+            elif isinstance(n, ast.Name) and n.id in ("jax", "jnp"):
+                yield n.lineno, f"use of {n.id!r}"
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag jax/jnp imports or uses inside the replay scopes."""
+        for rel in self.MODULE_SCOPED:
+            pf = repo.file(rel)
+            if pf is None or pf.tree is None:
+                continue
+            for lineno, what in self._jax_refs(pf.tree):
+                yield Finding(
+                    self.id, pf.rel, lineno,
+                    f"{what} in a stateless-replay module: schedule math "
+                    "must stay numpy-only for deterministic replay")
+        for rel, classes in self.CLASS_SCOPED.items():
+            pf = repo.file(rel)
+            if pf is None or pf.tree is None:
+                continue
+            for node in ast.walk(pf.tree):
+                if (isinstance(node, ast.ClassDef)
+                        and node.name in classes):
+                    for lineno, what in self._jax_refs(node):
+                        yield Finding(
+                            self.id, pf.rel, lineno,
+                            f"{what} inside {node.name}: schedule replay "
+                            "must stay numpy-only")

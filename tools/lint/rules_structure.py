@@ -1,0 +1,184 @@
+"""Cross-module structural rules.
+
+* ``kernel-triple`` (PRs 4/6/9): every Pallas kernel ships as a TRIPLE —
+  the kernel itself, a pure-jnp twin wired through ``kernels/ops.py``
+  (the CPU path), and a ``*_ref`` oracle in ``kernels/ref.py`` with a
+  parity test pinning them together.  A kernel without its twin/oracle
+  silently diverges the CPU and TPU paths.
+* ``bench-registry`` (PR 6 aftermath): a benchmark module that is not
+  registered in ``benchmarks/run.py`` never runs in the harness — its
+  numbers silently go stale (the serving benchmark sat unregistered for
+  three PRs).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from tools.lint.core import Finding, Repo, Rule
+
+_NON_KERNEL = {"__init__", "ops", "ref"}
+
+
+def _calls_pallas(tree: ast.AST) -> bool:
+    """True when the module calls ``pl.pallas_call`` (defines a Pallas
+    kernel)."""
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "pallas_call"):
+            return True
+    return False
+
+
+def _public_defs(tree: ast.AST) -> List[str]:
+    """Top-level public function names."""
+    return [n.name for n in ast.iter_child_nodes(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not n.name.startswith("_")]
+
+
+def _identifiers(tree: ast.AST) -> Set[str]:
+    """Every identifier a module references (names, attributes, imported
+    names) — the haystack for 'does any test mention X'."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add(alias.name.split(".")[-1])
+    return out
+
+
+def _tokens(*names: str) -> Set[str]:
+    """Underscore-split word set of one or more identifiers."""
+    out: Set[str] = set()
+    for name in names:
+        out.update(t for t in name.split("_") if t)
+    return out
+
+
+class KernelTripleRule(Rule):
+    """Every Pallas kernel module needs its full triple: a twin wired in
+    ``kernels/ops.py``, a related ``*_ref`` oracle in ``kernels/ref.py``
+    and a test referencing that oracle (the bitwise kernel/twin/oracle
+    pin of PRs 4, 6 and 9)."""
+
+    id = "kernel-triple"
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Cross-check kernels/ against ops.py, ref.py and tests/."""
+        kernel_files = [pf for pf in repo.glob("src/repro/kernels/*.py")
+                        if pf.path.stem not in _NON_KERNEL
+                        and pf.tree is not None and _calls_pallas(pf.tree)]
+        if not kernel_files:
+            return
+
+        ops_pf = repo.file("src/repro/kernels/ops.py")
+        ref_pf = repo.file("src/repro/kernels/ref.py")
+        ops_imported: Set[str] = set()          # kernel module stems
+        if ops_pf is not None and ops_pf.tree is not None:
+            for node in ast.walk(ops_pf.tree):
+                if isinstance(node, ast.ImportFrom) and node.module:
+                    parts = node.module.split(".")
+                    if "kernels" in parts:
+                        ops_imported.add(parts[-1])
+        ref_oracles: List[str] = []
+        if ref_pf is not None and ref_pf.tree is not None:
+            ref_oracles = [n for n in _public_defs(ref_pf.tree)
+                           if n.endswith("_ref")]
+        test_ids: Dict[str, Set[str]] = {
+            pf.rel: _identifiers(pf.tree)
+            for pf in repo.glob("tests/test_*.py") if pf.tree is not None}
+
+        for pf in kernel_files:
+            stem = pf.path.stem
+            words = _tokens(stem, *_public_defs(pf.tree))
+            if stem not in ops_imported:
+                yield Finding(
+                    self.id, pf.rel, 1,
+                    f"Pallas kernel module {stem!r} has no jnp twin "
+                    "wired through kernels/ops.py (the CPU path and the "
+                    "single public entry point)")
+            matched = [r for r in ref_oracles
+                       if _tokens(r[:-len("_ref")]) & words]
+            if not matched:
+                yield Finding(
+                    self.id, pf.rel, 1,
+                    f"Pallas kernel module {stem!r} has no matching "
+                    "*_ref oracle in kernels/ref.py (the allclose "
+                    "target the twin is pinned to)")
+                continue
+            if not any(set(matched) & ids for ids in test_ids.values()):
+                yield Finding(
+                    self.id, pf.rel, 1,
+                    f"no test under tests/ references an oracle of "
+                    f"kernel module {stem!r} ({', '.join(matched)}) — "
+                    "the kernel/twin/oracle parity pin is unenforced")
+
+
+def _literal_assign(tree: ast.AST, name: str):
+    """The literal value assigned to top-level ``name`` (None if absent
+    or not a literal)."""
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    try:
+                        return ast.literal_eval(node.value)
+                    except (ValueError, SyntaxError):
+                        return None
+    return None
+
+
+def _has_main(tree: ast.AST) -> bool:
+    """True when the module is runnable: a ``__main__`` guard or a
+    top-level ``main`` function."""
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "main":
+            return True
+        if isinstance(node, ast.If):
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.Name) and sub.id == "__name__":
+                    return True
+    return False
+
+
+class BenchRegistryRule(Rule):
+    """Every runnable ``benchmarks/*.py`` must be registered in
+    ``benchmarks/run.py`` (``_MODULES``) or listed in its ``EXCLUDED``
+    set — an unregistered benchmark never runs under the harness and its
+    committed numbers silently go stale."""
+
+    id = "bench-registry"
+
+    def check(self, repo: Repo) -> Iterable[Finding]:
+        """Flag runnable benchmark modules absent from run.py's
+        registry/exclusion set."""
+        benches = repo.glob("benchmarks/*.py")
+        if not benches:
+            return
+        registered: Set[str] = set()
+        excluded: Set[str] = set()
+        run_pf = repo.file("benchmarks/run.py")
+        if run_pf is not None and run_pf.tree is not None:
+            modules = _literal_assign(run_pf.tree, "_MODULES")
+            if isinstance(modules, dict):
+                registered = {str(v) for v in modules.values()}
+            excl = _literal_assign(run_pf.tree, "EXCLUDED")
+            if isinstance(excl, (set, frozenset, tuple, list)):
+                excluded = {str(v) for v in excl}
+        for pf in benches:
+            stem = pf.path.stem
+            if pf.tree is None or stem in registered or stem in excluded:
+                continue
+            if not _has_main(pf.tree):
+                continue
+            yield Finding(
+                self.id, pf.rel, 1,
+                f"runnable benchmark {stem!r} is neither registered in "
+                "benchmarks/run.py (_MODULES) nor listed in its EXCLUDED "
+                "set — it never runs under the harness")
